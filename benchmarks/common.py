@@ -1,0 +1,47 @@
+"""Shared benchmark helpers.
+
+The paper's absolute numbers come from a 2016 Hadoop cluster; this
+harness validates the paper's *relative* claims on CPU-budget-scaled
+record counts (documented per table in EXPERIMENTS.md).  Output format:
+``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time (seconds) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def wall(fn: Callable, warmup: int = 1) -> float:
+    """Wall-time one call after `warmup` warm-up calls.  The per-iteration
+    -job baselines (`baselines/mr_fkm.py`) exclude their XLA compile from
+    timing ("warm JVM"); timing BigFCM cold would charge it ~5 graph
+    compiles (~seconds on this 1-core CPU) that a deployed service pays
+    once — warm-vs-warm is the apples-to-apples comparison."""
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0

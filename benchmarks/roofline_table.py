@@ -1,0 +1,68 @@
+"""Render the §Roofline table (EXPERIMENTS.md) from results/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_t(s):
+    if s == 0:
+        return "0"
+    if s < 1e-3:
+        return f"{s * 1e6:.0f}µs"
+    if s < 1:
+        return f"{s * 1e3:.1f}ms"
+    return f"{s:.3g}s"
+
+
+def load(dirname):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def render(recs, mesh_filter="16x16"):
+    rows = []
+    shapes_order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+                    "long_500k": 3}
+    recs = [r for r in recs if r.get("mesh") == mesh_filter]
+    recs.sort(key=lambda r: (r["arch"], shapes_order.get(r["shape"], 9)))
+    hdr = ("| arch | shape | t_compute | t_memory | t_collective | "
+           "bottleneck | useful | MFU-bound |")
+    sep = "|" + "---|" * 8
+    rows.append(hdr)
+    rows.append(sep)
+    for r in recs:
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"skip | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |")
+            continue
+        ro = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_t(ro['t_compute_s'])} | "
+            f"{fmt_t(ro['t_memory_s'])} | {fmt_t(ro['t_collective_s'])} | "
+            f"{ro['bottleneck']} | {ro['useful_flops_ratio']:.2f} | "
+            f"{ro['mfu_bound']:.3f} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    print(render(load(args.dir), args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Benchmark harness — one module per paper table.
+
+``python -m benchmarks.run [table ...]`` prints ``name,us_per_call,derived``
+CSV rows (and writes benchmarks/results.csv).
+"""
+from __future__ import annotations
+
+import importlib
+import sys
+import time
+
+TABLES = ["t2_driver_epsilon", "t3_epsilon_methods", "t4_datasize",
+          "t5_clusters", "t6_datasets", "t7_accuracy", "t8_silhouette",
+          "t9_kernel"]
+
+
+def main() -> None:
+    args = [a for a in sys.argv[1:] if not a.startswith("-")]
+    tables = args or TABLES
+    from .common import ROWS, emit
+    print("name,us_per_call,derived")
+    for t in tables:
+        mod = importlib.import_module(f"benchmarks.{t}")
+        t0 = time.perf_counter()
+        mod.run()
+        emit(f"{t}/total_wall", (time.perf_counter() - t0) * 1e6, "")
+    with open("benchmarks/results.csv", "w") as f:
+        f.write("name,us_per_call,derived\n")
+        f.write("\n".join(ROWS) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Paper Table 5: execution time vs number of clusters (HIGGS-like).
+
+Claim reproduced: BigFCM cost grows ~linearly in C (the O(n·c)
+Kolen–Hutcheson update), not quadratically."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import BigFCMConfig, bigfcm_fit
+from repro.data import make_higgs_like
+
+from .common import emit, wall
+
+N = 60_000
+CS = [6, 10, 15, 50]
+
+
+def run():
+    x, _ = make_higgs_like(N)
+    xj = jnp.asarray(x)
+    rows = []
+    for c in CS:
+        cfg = BigFCMConfig(n_clusters=c, m=2.0, combiner_eps=5e-11,
+                           reducer_eps=5e-11, max_iter=1000)
+        t = wall(lambda: bigfcm_fit(xj, cfg))
+        emit(f"t5/higgs_like/c{c}", t * 1e6, "")
+        rows.append((c, t))
+    growth = rows[-1][1] / max(rows[0][1], 1e-9)
+    emit("t5/growth_c50_vs_c6", 0.0,
+         f"time_ratio={growth:.1f}_vs_c_ratio={50 / 6:.1f}"
+         f"_quadratic_would_be_{(50 / 6) ** 2:.0f}")
+    return rows

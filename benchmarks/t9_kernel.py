@@ -1,0 +1,32 @@
+"""Framework bench (beyond paper tables): Pallas FCM sweep kernel vs the
+jnp sweep — per-call latency across N×C×d shapes (interpret mode on CPU;
+the BlockSpec tiling is the TPU deployment artifact)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fcm import fcm_sweep
+from repro.kernels.ops import fcm_sweep_kernel
+
+from .common import emit, timeit
+
+SHAPES = [(65_536, 18, 10), (65_536, 28, 2), (16_384, 41, 23)]
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for n, d, c in SHAPES:
+        x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        w = jnp.ones((n,), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(c, d)).astype(np.float32))
+        f_ref = jax.jit(lambda a, b, q: fcm_sweep(a, b, q, 2.0))
+        t_ref = timeit(f_ref, x, w, v)
+        emit(f"t9/jnp_sweep/n{n}_d{d}_c{c}", t_ref * 1e6,
+             f"flops={4 * n * c * d:.3g}")
+        t_k = timeit(lambda a, b, q: fcm_sweep_kernel(a, b, q, 2.0),
+                     x, w, v, warmup=1, iters=1)
+        emit(f"t9/pallas_interpret/n{n}_d{d}_c{c}", t_k * 1e6,
+             "interpret_mode=correctness_only")
+    return None

@@ -1,0 +1,80 @@
+"""Streaming clustering service: BigFCM over a sharded, prefetching data
+pipeline with checkpoint/restart and straggler monitoring — the paper's
+deployment story (multi-gigabyte HDFS scan) as a long-running service.
+
+Data arrives in chunks (the HDFS-split analogue), each macro-batch is
+clustered starting from the previous centers (warm start = the paper's
+distributed-cache mechanism applied over *time* as well as space), and
+the running (centers, weights) pair is itself WFCM-merged — the same
+weighted-combine math that merges combiner outputs merges epochs.
+
+    PYTHONPATH=src python examples/cluster_service.py
+"""
+import tempfile
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bigfcm import BigFCMConfig, bigfcm_fit
+from repro.core.fcm import fcm
+from repro.core.metrics import assign, clustering_accuracy, match_centers
+from repro.data.loader import ShardedLoader, normalize
+from repro.data.synth import make_kdd_like
+from repro.ft.checkpoint import CheckpointManager
+from repro.ft.elastic import StragglerMonitor
+from repro.launch.mesh import make_host_mesh
+
+C = 23                    # KDD99-like: 23 classes, 41 features
+CHUNK, BATCH_ROWS, N_CHUNKS = 40_000, 120_000, 6
+
+mesh = make_host_mesh()
+ckpt = CheckpointManager(tempfile.mkdtemp(prefix="repro_fcm_ckpt_"))
+monitor = StragglerMonitor(on_straggler=lambda dt, ew: print(
+    f"  [straggler] step {dt:.2f}s vs EWMA {ew:.2f}s"))
+
+# one big dataset, streamed in HDFS-split-sized chunks
+x_all, _ = make_kdd_like(CHUNK * N_CHUNKS, seed=7)
+stream = (x_all[i * CHUNK:(i + 1) * CHUNK] for i in range(N_CHUNKS))
+loader = ShardedLoader(stream, BATCH_ROWS, mesh=mesh, transform=normalize)
+
+cfg = BigFCMConfig(n_clusters=C, m=1.2, combiner_eps=1e-7,
+                   reducer_eps=5e-11, max_iter=300)
+
+centers, weights = None, None
+for i, (batch, w) in enumerate(loader):
+    monitor.start()
+    res = bigfcm_fit(batch, cfg, mesh=mesh, point_weights=w)
+    if centers is None:
+        centers, weights = res.centers, res.center_weights
+    else:  # WFCM-merge this epoch's centers into the running summary
+        merged = fcm(jnp.concatenate([centers, res.centers]),
+                     centers, m=cfg.m, eps=cfg.reducer_eps,
+                     max_iter=cfg.max_iter,
+                     point_weights=jnp.concatenate(
+                         [weights, res.center_weights]))
+        centers, weights = merged.centers, merged.center_weights
+    monitor.stop()
+    ckpt.save(i, {"centers": centers, "weights": weights})
+    print(f"macro-batch {i}: objective {float(res.objective):.1f}, "
+          f"combiner iters "
+          f"{np.asarray(res.diagnostics.combiner_iters).ravel().tolist()}")
+
+ckpt.wait()
+print(f"\ncheckpoints kept: {ckpt.all_steps()} (atomic, keep-last-3)")
+
+# quality check on a fresh sample from the same mixture (same seed ⇒
+# same component centers, freshly drawn noise/labels)
+x, y = make_kdd_like(60_000, seed=7)
+x = normalize(x)
+acc = clustering_accuracy(y, assign(x, np.asarray(centers)), C)
+true_centers = np.stack([x[y == c].mean(0) for c in range(C)
+                         if (y == c).any()])
+err = match_centers(np.asarray(centers)[:len(true_centers)], true_centers)
+print(f"held-out confusion accuracy: {acc:.3f}  center error: {err:.4f}")
+
+# restart path: restore from latest checkpoint and keep serving
+restored = ckpt.restore({"centers": centers, "weights": weights})
+assert np.allclose(np.asarray(restored["centers"]),
+                   np.asarray(centers), atol=1e-6)
+print("OK -- restart restores the clustering state bit-exactly.")

@@ -1,0 +1,59 @@
+"""Quickstart: BigFCM (the paper's Algorithm 3) end to end in ~a minute.
+
+Generates a Gaussian-mixture dataset, clusters it with BigFCM on every
+local device (the Hadoop driver/map/combine/reduce pipeline as ONE XLA
+program), and checks the recovered centers against ground truth and
+against single-machine FCM.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bigfcm import BigFCMConfig, bigfcm_fit
+from repro.core.fcm import fcm
+from repro.core.metrics import assign, match_centers, silhouette_width
+from repro.data.synth import make_blobs
+from repro.launch.mesh import make_host_mesh
+
+C, D, N = 6, 18, 200_000
+
+x, labels = make_blobs(N, D, C, spread=0.6, sep=6.0, seed=0)
+true_centers = np.stack([x[labels == c].mean(0) for c in range(C)])
+print(f"dataset: {N:,} records × {D} features, {C} true clusters")
+
+mesh = make_host_mesh()
+print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} device(s)")
+
+cfg = BigFCMConfig(n_clusters=C, m=2.0, driver_eps=5e-11,
+                   combiner_eps=1e-8, reducer_eps=5e-11)
+t0 = time.perf_counter()
+res = bigfcm_fit(jnp.asarray(x), cfg, mesh=mesh)
+t_big = time.perf_counter() - t0
+d = res.diagnostics
+print(f"\nBigFCM: {t_big:.2f}s  (driver raced FCM {d.t_fcm_driver:.3f}s "
+      f"vs WFCMPB {d.t_wfcmpb_driver:.3f}s -> flag={d.flag}, "
+      f"sample lambda={d.sample_size})")
+print("combiner local iterations per shard: "
+      f"{np.asarray(d.combiner_iters).ravel().tolist()}")
+
+err = match_centers(np.asarray(res.centers), true_centers)
+print(f"center recovery error (mean matched distance): {err:.4f}")
+
+# reference: single-machine FCM on the full data, same seeds
+t0 = time.perf_counter()
+seeds = jnp.asarray(true_centers + np.random.default_rng(1)
+                    .normal(0, 2.0, true_centers.shape).astype(np.float32))
+ref = fcm(jnp.asarray(x), seeds, m=2.0, eps=5e-11, max_iter=1000)
+t_ref = time.perf_counter() - t0
+ref_err = match_centers(np.asarray(ref.centers), true_centers)
+print(f"single-machine FCM: {t_ref:.2f}s, center error {ref_err:.4f}")
+
+sw = silhouette_width(x, assign(x, res.centers))
+print(f"silhouette width (4k subsample): {sw:.4f}")
+assert err < 0.1, "BigFCM failed to recover ground-truth centers"
+print("\nOK -- BigFCM recovered the mixture centers; "
+      f"distributed/single-machine center error {err:.4f}/{ref_err:.4f}")

@@ -1,0 +1,4 @@
+from .mr_fkm import mr_fuzzy_kmeans
+from .kmeans import mr_kmeans
+
+__all__ = ["mr_fuzzy_kmeans", "mr_kmeans"]

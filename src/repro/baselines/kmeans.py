@@ -1,0 +1,56 @@
+"""Mahout-KM baseline: hard k-means, one MapReduce job per iteration."""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.fcm import pairwise_sqdist
+
+
+@jax.jit
+def _kmeans_sweep(x, centers):
+    d2 = pairwise_sqdist(x, centers)
+    assign = jnp.argmin(d2, axis=-1)                       # (N,)
+    onehot = jax.nn.one_hot(assign, centers.shape[0],
+                            dtype=jnp.float32)             # (N, C)
+    counts = onehot.sum(0)
+    sums = onehot.T @ x.astype(jnp.float32)
+    v_new = sums / jnp.maximum(counts, 1.0)[:, None]
+    # empty clusters keep their previous center
+    v_new = jnp.where(counts[:, None] > 0, v_new, centers)
+    inertia = jnp.sum(jnp.min(d2, axis=-1))
+    delta = jnp.max(jnp.sum((v_new - centers) ** 2, axis=-1))
+    return v_new, counts, inertia, delta
+
+
+def mr_kmeans(
+    x: jax.Array,
+    init_centers: jax.Array,
+    *,
+    eps: float = 1e-6,
+    max_iter: int = 1000,
+    mesh: Optional[Mesh] = None,
+    data_axes=("data",),
+    launch_overhead: float = 0.0,
+):
+    """Returns (centers, counts, inertia, n_jobs, elapsed_seconds)."""
+    if mesh is not None:
+        x = jax.device_put(x, NamedSharding(mesh, P(tuple(data_axes))))
+    centers = jnp.asarray(init_centers, jnp.float32)
+    jax.block_until_ready(_kmeans_sweep(x, centers))
+    t0 = time.perf_counter()
+    n_jobs, inertia = 0, jnp.float32(0)
+    counts = jnp.zeros((centers.shape[0],), jnp.float32)
+    for _ in range(max_iter):
+        centers, counts, inertia, delta = _kmeans_sweep(x, centers)
+        delta = float(delta)   # host sync per job
+        n_jobs += 1
+        if delta <= eps:
+            break
+    elapsed = time.perf_counter() - t0 + launch_overhead * n_jobs
+    return centers, counts, inertia, n_jobs, elapsed

@@ -1,0 +1,219 @@
+"""BigFCM (paper Algorithm 3) on a JAX device mesh.
+
+Structure mirrors the paper exactly:
+
+  Driver   — sample λ records (Parker–Hall), run plain FCM *and* WFCMPB on
+             the sample, time both, keep the faster one's centers (Flag).
+             The winning centers play the role of the Hadoop distributed
+             cache file: they enter the SPMD program as a replicated array.
+  Mapper   — host data pipeline hands each device its row-shard
+             (`repro.data.loader`); record parsing is host-side.
+  Combiner — inside `shard_map`: per-device (weighted) FCM to LOCAL
+             convergence using the cached seeds.  No collectives inside the
+             local loop, so shards may take different iteration counts —
+             a slow shard only delays the final gather (the TPU analogue
+             of Hadoop's combiner locality + speculative execution).
+  Reducer  — `all_gather` of the (P·C centers, P·C weights) — a few KB —
+             then a replicated WFCM over them.  With a pod axis,
+             ``hierarchical=True`` reduces within each pod first and then
+             across pods (the paper's "multiple reduce jobs" variant).
+
+The combiner+reducer is ONE jit'd XLA program: the paper's "just one
+map-reduce job works iteratively" claim.  The per-iteration-job baseline
+(Ludwig / Mahout FKM) lives in `repro.baselines.mr_fkm`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from .fcm import FCMResult, fcm, membership_terms, pairwise_sqdist
+from .sampling import parker_hall_sample_size
+from .wfcmpb import wfcmpb
+
+
+@dataclasses.dataclass(frozen=True)
+class BigFCMConfig:
+    n_clusters: int
+    m: float = 2.0
+    driver_eps: float = 5e-11      # Table 2: tight driver ε ⇒ 6× total win
+    combiner_eps: float = 1e-8
+    reducer_eps: float = 5e-11
+    max_iter: int = 1000
+    alpha: float = 0.05            # Parker–Hall confidence
+    r: float = 0.10                # Parker–Hall relative class difference
+    sample_size: Optional[int] = None   # override Eq. (4) if set
+    block_size: int = 2048         # WFCMPB block size
+    hierarchical: bool = False     # two-level reduce over ('data') then ('pod')
+    use_kernel: bool = False       # Pallas fcm sweep in the combiner
+    use_driver: bool = True        # False = random seeds (Table 2 baseline)
+    seed: int = 0
+
+
+class BigFCMDiagnostics(NamedTuple):
+    flag: bool                 # True ⇒ plain FCM won the driver race
+    t_fcm_driver: float        # seconds — driver FCM on the sample
+    t_wfcmpb_driver: float     # seconds — driver WFCMPB on the sample
+    sample_size: int
+    combiner_iters: jax.Array  # (P,) local iteration counts (straggler view)
+    reducer_iters: jax.Array   # ()
+
+
+class BigFCMResult(NamedTuple):
+    centers: jax.Array         # (C, d) — V_final
+    center_weights: jax.Array  # (C,)
+    objective: jax.Array       # () global fuzzy objective vs. final centers
+    diagnostics: BigFCMDiagnostics
+
+
+def _sweep_fn(cfg: BigFCMConfig):
+    if not cfg.use_kernel:
+        return None
+    from repro.kernels.ops import fcm_sweep_kernel
+    return fcm_sweep_kernel
+
+
+# ---------------------------------------------------------------- driver ---
+
+def run_driver(x_sample: jax.Array, cfg: BigFCMConfig, key: jax.Array):
+    """Pre-cluster the sample; race FCM vs WFCMPB (paper lines 1–6)."""
+    c = cfg.n_clusters
+    idx = jax.random.choice(key, x_sample.shape[0], (c,), replace=False)
+    seeds = jnp.take(x_sample, idx, axis=0)
+    sweep = _sweep_fn(cfg)
+
+    f_fcm = jax.jit(partial(fcm, m=cfg.m, eps=cfg.driver_eps,
+                            max_iter=cfg.max_iter, sweep_fn=sweep))
+    f_pb = jax.jit(partial(wfcmpb, m=cfg.m, eps=cfg.driver_eps,
+                           max_iter=cfg.max_iter, block_size=cfg.block_size,
+                           sweep_fn=sweep))
+    # Warm up compilation outside the race (Hadoop's JVM is warm too).
+    jax.block_until_ready(f_fcm(x_sample, seeds))
+    jax.block_until_ready(f_pb(x_sample, seeds))
+
+    t0 = time.perf_counter()
+    res_fcm = jax.block_until_ready(f_fcm(x_sample, seeds))
+    t_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res_pb = jax.block_until_ready(f_pb(x_sample, seeds))
+    t_f = time.perf_counter() - t0
+
+    flag = t_f - t_s > 0         # paper line 6: Flag=1 ⇒ FCM to the cache
+    v_init = res_fcm.centers if flag else res_pb.centers
+    return v_init, flag, t_s, t_f
+
+
+# --------------------------------------------------- combiner + reducer ---
+
+def _combine_reduce(x_local, w_local, v_init, *, cfg: BigFCMConfig,
+                    flag: bool, data_axes, pod_axis):
+    """shard_map body: local clustering then weighted hierarchical reduce."""
+    sweep = _sweep_fn(cfg)
+    if flag:
+        local = fcm(x_local, v_init, m=cfg.m, eps=cfg.combiner_eps,
+                    max_iter=cfg.max_iter, point_weights=w_local,
+                    sweep_fn=sweep)
+    else:
+        local = wfcmpb(x_local, v_init, m=cfg.m, eps=cfg.combiner_eps,
+                       max_iter=cfg.max_iter, block_size=cfg.block_size,
+                       point_weights=w_local, sweep_fn=sweep)
+
+    def gather_reduce(centers, weights, axes, init):
+        vg = jax.lax.all_gather(centers, axes)      # (P, C, d)
+        wg = jax.lax.all_gather(weights, axes)      # (P, C)
+        pts = vg.reshape(-1, centers.shape[-1])
+        wts = wg.reshape(-1)
+        # Paper line 13 seeds the reducer WFCM with V_1 (the first
+        # combiner's centers); ``init`` carries exactly that.
+        return fcm(pts, init, m=cfg.m, eps=cfg.reducer_eps,
+                   max_iter=cfg.max_iter, point_weights=wts, sweep_fn=sweep)
+
+    if cfg.hierarchical and pod_axis is not None:
+        inner_axes = tuple(a for a in data_axes if a != pod_axis)
+        mid = gather_reduce(local.centers, local.center_weights,
+                            inner_axes, local.centers)
+        red = gather_reduce(mid.centers, mid.center_weights,
+                            (pod_axis,), mid.centers)
+    else:
+        v1 = jax.lax.all_gather(local.centers, data_axes)[0]
+        red = gather_reduce(local.centers, local.center_weights,
+                            data_axes, v1)
+
+    # Global objective of the final centers over the full dataset.
+    um = membership_terms(x_local, red.centers, cfg.m) * w_local[:, None]
+    q_local = jnp.sum(um * pairwise_sqdist(x_local, red.centers))
+    q = jax.lax.psum(q_local, data_axes)
+    iters = jax.lax.all_gather(local.n_iter, data_axes)
+    return red.centers, red.center_weights, q, iters, red.n_iter
+
+
+# ------------------------------------------------------------------ fit ---
+
+def bigfcm_fit(
+    x: jax.Array,
+    cfg: BigFCMConfig,
+    *,
+    mesh: Optional[Mesh] = None,
+    data_axes: Sequence[str] = ("data",),
+    point_weights: Optional[jax.Array] = None,
+    key: Optional[jax.Array] = None,
+) -> BigFCMResult:
+    """Cluster ``x`` (N, d) with BigFCM on ``mesh`` (or single device)."""
+    key = key if key is not None else jax.random.PRNGKey(cfg.seed)
+    k_sample, k_seed = jax.random.split(key)
+    n = x.shape[0]
+
+    lam = cfg.sample_size or parker_hall_sample_size(
+        cfg.n_clusters, cfg.r, cfg.alpha)
+    lam = min(lam, n)
+    sample_idx = jax.random.choice(k_sample, n, (lam,), replace=False)
+    x_sample = jnp.take(jnp.asarray(x), sample_idx, axis=0)
+
+    if cfg.use_driver:
+        v_init, flag, t_s, t_f = run_driver(x_sample, cfg, k_seed)
+    else:  # ablation: random initial centers, no pre-clustering (Table 2)
+        idx = jax.random.choice(k_seed, lam, (cfg.n_clusters,),
+                                replace=False)
+        v_init, flag, t_s, t_f = jnp.take(x_sample, idx, axis=0), True, \
+            0.0, 0.0
+
+    w = (jnp.ones((n,), jnp.float32) if point_weights is None
+         else jnp.asarray(point_weights, jnp.float32))
+
+    if mesh is None or len(mesh.devices.flatten()) == 1:
+        sweep = _sweep_fn(cfg)
+        local = fcm(x, v_init, m=cfg.m, eps=cfg.combiner_eps,
+                    max_iter=cfg.max_iter, point_weights=w, sweep_fn=sweep)
+        red = fcm(local.centers, local.centers, m=cfg.m, eps=cfg.reducer_eps,
+                  max_iter=cfg.max_iter, point_weights=local.center_weights,
+                  sweep_fn=sweep)
+        diag = BigFCMDiagnostics(flag, t_s, t_f, lam,
+                                 local.n_iter[None], red.n_iter)
+        return BigFCMResult(red.centers, red.center_weights, red.objective,
+                            diag)
+
+    data_axes = tuple(data_axes)
+    pod_axis = "pod" if "pod" in mesh.axis_names else None
+    x_spec = P(data_axes)
+    job = shard_map(
+        partial(_combine_reduce, cfg=cfg, flag=flag,
+                data_axes=data_axes, pod_axis=pod_axis),
+        mesh=mesh,
+        in_specs=(x_spec, P(data_axes), P(None, None)),
+        out_specs=(P(None, None), P(None), P(), P(None), P()),
+        check_vma=False,
+    )
+    x_sharded = jax.device_put(x, NamedSharding(mesh, x_spec))
+    w_sharded = jax.device_put(w, NamedSharding(mesh, P(data_axes)))
+    v_rep = jax.device_put(v_init, NamedSharding(mesh, P(None, None)))
+    centers, cw, q, iters, r_it = jax.jit(job)(x_sharded, w_sharded, v_rep)
+    diag = BigFCMDiagnostics(flag, t_s, t_f, lam, iters, r_it)
+    return BigFCMResult(centers, cw, q, diag)

@@ -1,0 +1,78 @@
+"""WFCMPB — progressive-block weighted FCM (paper Algorithm 2).
+
+Data is split into S blocks (block size from the Parker–Hall sampling
+formula).  Block i is clustered with FCM seeded by the previous block's
+centers; its (centers, weights) are merged into the running summary with
+a weighted FCM.  The running summary is a FIXED-size (C centers, C
+weights) sketch, so the whole progression is a `lax.scan` — one XLA
+program, O(C·d) state, exactly the paper's single-pass property.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .fcm import FCMResult, fcm
+
+
+def wfcmpb(
+    x: jax.Array,
+    init_centers: jax.Array,
+    *,
+    m: float = 2.0,
+    eps: float = 1e-6,
+    max_iter: int = 1000,
+    block_size: int = 4096,
+    point_weights: Optional[jax.Array] = None,
+    merge_max_iter: int = 200,
+    sweep_fn=None,
+) -> FCMResult:
+    """Cluster ``x`` block-progressively.  x: (N, d) → FCMResult.
+
+    N is padded up to a multiple of block_size with zero-weight phantom
+    records (weight 0 ⇒ no contribution to any accumulation).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    n, d = x.shape
+    c = init_centers.shape[0]
+    w = (jnp.ones((n,), jnp.float32) if point_weights is None
+         else jnp.asarray(point_weights, jnp.float32))
+
+    n_blocks = max(1, -(-n // block_size))
+    pad = n_blocks * block_size - n
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, d), jnp.float32)], axis=0)
+        w = jnp.concatenate([w, jnp.zeros((pad,), jnp.float32)], axis=0)
+    xb = x.reshape(n_blocks, block_size, d)
+    wb = w.reshape(n_blocks, block_size)
+
+    v0 = jnp.asarray(init_centers, jnp.float32)
+
+    def step(carry, blk):
+        v_prev, v_sum, w_sum, it_total = carry
+        bx, bw = blk
+        # C_i, W_i = FCM(S_i, C_{i−1})  — seed with previous block's centers.
+        res = fcm(bx, v_prev, m=m, eps=eps, max_iter=max_iter,
+                  point_weights=bw, sweep_fn=sweep_fn)
+        # V_final, W_f = WFCM(V_final ∪ C_i, W_f ∪ W_i)
+        pts = jnp.concatenate([v_sum, res.centers], axis=0)        # (2C, d)
+        wts = jnp.concatenate([w_sum, res.center_weights], axis=0)  # (2C,)
+        merged = fcm(pts, res.centers, m=m, eps=eps,
+                     max_iter=merge_max_iter, point_weights=wts,
+                     sweep_fn=sweep_fn)
+        carry = (res.centers, merged.centers, merged.center_weights,
+                 it_total + res.n_iter)
+        return carry, res.objective
+
+    # Zero-weight init summary: phantom centers are ignored by WFCM.
+    init = (v0, v0, jnp.zeros((c,), jnp.float32), jnp.int32(0))
+    (v_last, v_final, w_final, iters), _ = jax.lax.scan(
+        step, init, (xb, wb))
+    del v_last
+    # Objective of the final sketch against the full (padded) data:
+    from .fcm import fcm_sweep, membership_terms, pairwise_sqdist  # noqa
+    um = membership_terms(x, v_final, m) * w[:, None]
+    q = jnp.sum(um * pairwise_sqdist(x, v_final))
+    return FCMResult(v_final, w_final, iters, q)

@@ -1,0 +1,8 @@
+from .synth import (make_blobs, make_susy_like, make_higgs_like,
+                    make_kdd_like, iris, pima_like)
+from .loader import ShardedLoader
+from .lm import synthetic_token_batches
+
+__all__ = ["make_blobs", "make_susy_like", "make_higgs_like",
+           "make_kdd_like", "iris", "pima_like", "ShardedLoader",
+           "synthetic_token_batches"]

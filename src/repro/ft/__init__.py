@@ -1,0 +1,4 @@
+from .checkpoint import CheckpointManager
+from .elastic import StragglerMonitor, elastic_remesh
+
+__all__ = ["CheckpointManager", "StragglerMonitor", "elastic_remesh"]

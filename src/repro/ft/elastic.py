@@ -1,0 +1,83 @@
+"""Elastic scaling + straggler mitigation (host-side runtime policies).
+
+`elastic_remesh` rebuilds the mesh after node loss/gain and reshards live
+state onto it (device_put with the new shardings; cross-host this is the
+checkpoint-restore path — see CheckpointManager.restore(shardings=...)).
+
+`StragglerMonitor` implements the speculative-execution analogue: SPMD
+steps are synchronous, so a straggling host shows up as a slow global
+step.  The monitor keeps an EWMA of step times and flags outliers; the
+launcher's policy is then (1) shrink the straggler's shard via the
+weighted loader (BigFCM's weights make unequal shards *correct* — the
+combiner weight of a smaller shard is proportionally smaller), or
+(2) drop the node and elastic_remesh.  BigFCM additionally caps combiner
+divergence with `max_iter` — a shard that won't converge cannot stall the
+job by more than the iteration budget.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+
+def make_mesh_for(devices: Sequence, *, model_parallel: int,
+                  pods: int = 1) -> Mesh:
+    """Best-effort (pod, data, model) mesh over an arbitrary device count
+    (elastic restart may come back with fewer hosts)."""
+    n = len(devices)
+    model = math.gcd(model_parallel, n)
+    data = n // (model * pods)
+    dev = np.asarray(devices)[:pods * data * model].reshape(
+        (pods, data, model))
+    if pods > 1:
+        return Mesh(dev, ("pod", "data", "model"))
+    return Mesh(dev.reshape(data, model), ("data", "model"))
+
+
+def elastic_remesh(state, old_shardings, new_mesh: Mesh):
+    """Reshard a live pytree onto a new mesh (same PartitionSpecs)."""
+    def move(x, s):
+        spec = s.spec if isinstance(s, NamedSharding) else s
+        return jax.device_put(x, NamedSharding(new_mesh, spec))
+    return jax.tree_util.tree_map(move, state, old_shardings)
+
+
+class StragglerMonitor:
+    def __init__(self, *, alpha: float = 0.1, threshold: float = 1.5,
+                 min_samples: int = 8,
+                 on_straggler: Optional[Callable[[float, float], None]] = None):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.min_samples = min_samples
+        self.on_straggler = on_straggler
+        self.ewma = None
+        self.n = 0
+        self.flags = 0
+        self._t0 = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> bool:
+        """Record a step; True if this step is a straggler outlier."""
+        dt = time.perf_counter() - self._t0
+        self.n += 1
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        is_straggler = (self.n >= self.min_samples
+                        and dt > self.threshold * self.ewma)
+        if is_straggler:
+            self.flags += 1
+            if self.on_straggler:
+                self.on_straggler(dt, self.ewma)
+        # EWMA excludes flagged outliers so one straggler doesn't mask the
+        # next.
+        if not is_straggler:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return is_straggler

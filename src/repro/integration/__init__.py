@@ -1,0 +1,13 @@
+"""BigFCM as a first-class framework feature.
+
+Two integration points wire the paper's clustering into the LM runtime:
+
+  * `router_init` — seed MoE router weights with FCM centroids of token
+    embeddings (clustered tokens route coherently from step 0).
+  * `curriculum`  — distributed curriculum bucketing: BigFCM clusters
+    sequence embeddings; buckets order/balance the data pipeline.
+"""
+from .router_init import fcm_router_init
+from .curriculum import curriculum_buckets, CurriculumSampler
+
+__all__ = ["fcm_router_init", "curriculum_buckets", "CurriculumSampler"]

@@ -1,0 +1,71 @@
+"""FCM-initialized MoE routers (DESIGN.md §Arch-applicability, MoE archs).
+
+The router weight `w_router` (D, E) is a linear map whose argmax decides
+expert assignment.  Random init routes tokens incoherently; BigFCM gives
+us E centroids of the token-embedding distribution in O(one pass) over a
+sharded corpus, and setting column e of the router to centroid_e (scaled)
+makes `logits[t, e] = <x_t, v_e>` — cosine-style affinity to cluster e.
+Tokens in the same embedding cluster then co-route from step 0, which is
+the paper's "good initial centers ⇒ fast convergence" claim transplanted
+to router training.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core.bigfcm import BigFCMConfig, BigFCMResult, bigfcm_fit
+from repro.sharding.rules import data_axes
+
+
+def fcm_router_init(
+    params,
+    cfg,
+    token_embeddings: jax.Array,
+    *,
+    mesh: Optional[Mesh] = None,
+    fcm_cfg: Optional[BigFCMConfig] = None,
+    scale: float = 1.0,
+    key: Optional[jax.Array] = None,
+):
+    """Return `params` with every MoE router seeded from BigFCM centroids.
+
+    token_embeddings: (N, D) sample of embedding vectors (e.g. the embed
+    table itself, or hidden states from a short probe run), sharded over
+    the mesh data axes by `bigfcm_fit` itself.
+    """
+    fcm_cfg = fcm_cfg or BigFCMConfig(
+        n_clusters=cfg.n_experts, m=2.0, combiner_eps=1e-6,
+        reducer_eps=1e-8, max_iter=200)
+    assert fcm_cfg.n_clusters == cfg.n_experts, \
+        (fcm_cfg.n_clusters, cfg.n_experts)
+    res: BigFCMResult = bigfcm_fit(
+        token_embeddings.astype(jnp.float32), fcm_cfg, mesh=mesh,
+        data_axes=data_axes(mesh) if mesh is not None else ("data",),
+        key=key)
+    # (E, D) centroids, unit-normalized → router columns
+    v = res.centers
+    v = v / (jnp.linalg.norm(v, axis=-1, keepdims=True) + 1e-8)
+    w = (scale * v.T)  # (D, E)
+
+    def set_router(p):
+        if isinstance(p, dict) and "w_router" in p:
+            p = dict(p)
+            old = p["w_router"]     # (D, E) or stacked (L, D, E)
+            p["w_router"] = jnp.broadcast_to(
+                w.astype(old.dtype), old.shape)
+            return p
+        return p
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            tree = set_router({k: walk(v) for k, v in tree.items()})
+            return tree
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(t) for t in tree)
+        return tree
+
+    return walk(params), res

@@ -1,0 +1,20 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``fcm_sweep_kernel`` is drop-in compatible with ``repro.core.fcm.fcm_sweep``
+(pass it as ``sweep_fn=``).  On CPU it runs the kernel body in interpret
+mode; on TPU it lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+
+from .fcm_update import fcm_sweep_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def fcm_sweep_kernel(x, w, centers, m: float = 2.0, *, tile_n: int = 1024):
+    return fcm_sweep_pallas(x, w, centers, m, tile_n=tile_n,
+                            interpret=_on_cpu())

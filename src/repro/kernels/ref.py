@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_D2_FLOOR = 1e-12
+
+
+def fcm_sweep_ref(x, w, centers, m: float = 2.0):
+    """Reference Alg.-1 sweep: returns (v_new, w_i, q).
+
+    Deliberately the textbook formulation (full N×C membership matrix) so
+    the kernel's tiled/no-U-matrix accumulation is checked against
+    independent math.
+    """
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    v = centers.astype(jnp.float32)
+    d2 = jnp.maximum(
+        jnp.sum((x[:, None, :] - v[None, :, :]) ** 2, axis=-1), _D2_FLOOR)
+    expo = 1.0 / (m - 1.0)
+    logd = jnp.log(d2)
+    lmin = jnp.min(logd, axis=-1, keepdims=True)
+    r = jnp.exp(-expo * (logd - lmin))
+    u = r / jnp.sum(r, axis=-1, keepdims=True)
+    um = jnp.power(u, m)
+    wum = um * w[:, None]
+    w_i = jnp.sum(wum, axis=0)
+    v_new = (wum.T @ x) / jnp.maximum(w_i, _D2_FLOOR)[:, None]
+    q = jnp.sum(wum * d2)
+    return v_new, w_i, q

@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# --- everything below may touch jax ---------------------------------------
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: sharding
+mismatches, compile-time OOMs and unsupported collectives all surface
+here.  Emits memory_analysis + cost_analysis + roofline terms per cell.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all --multi-pod both \
+      --out-dir results/dryrun
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import SHAPES, cell_applicable, shape_cell
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.launch.flops_model import step_flops, step_hbm_bytes
+from repro.launch.roofline import analyze, compiled_cost, model_flops_for
+from repro.optim.optimizers import make as make_opt
+from repro.optim import cosine_schedule
+from repro.serve import make_prefill, make_serve_step
+from repro.sharding.rules import mesh_context
+from repro.train import make_train_step
+
+
+def optimizer_name(cfg) -> str:
+    # adafactor for the 1T config (factored states; DESIGN.md §memory)
+    return "adafactor" if cfg.name.startswith("kimi") else "adamw"
+
+
+def ns(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def lower_cell(cfg, cell, mesh):
+    """Build + lower the cell's step function.  Returns `lowered`."""
+    opt_name = optimizer_name(cfg)
+    if cell.kind == "train":
+        opt = make_opt(opt_name)
+        state = S.abstract_train_state(cfg, opt)
+        state_sh = ns(mesh, S.train_state_pspecs(cfg, opt_name, mesh))
+        batch = S.batch_inputs(cfg, cell)
+        batch_sh = ns(mesh, S.batch_pspecs(cfg, cell, mesh))
+        step = make_train_step(
+            cfg, opt, lambda s: cosine_schedule(s, peak=3e-4, warmup=100,
+                                                total=10000))
+        fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None), donate_argnums=0)
+        return fn.lower(state, batch)
+    params = S.abstract_params(cfg)
+    params_sh = ns(mesh, S.param_pspecs(cfg, mesh))
+    if cell.kind == "prefill":
+        batch = S.batch_inputs(cfg, cell)
+        batch.pop("labels", None)
+        batch_sh = ns(mesh, S.batch_pspecs(cfg, cell, mesh))
+        batch_sh.pop("labels", None)
+        fn = jax.jit(make_prefill(cfg, cell.seq_len),
+                     in_shardings=(params_sh, batch_sh))
+        return fn.lower(params, batch)
+    # decode
+    caches, tokens = S.decode_inputs(cfg, cell)
+    caches_sh = ns(mesh, S.cache_pspecs(cfg, caches, cell.global_batch,
+                                        mesh))
+    tok_sh = NamedSharding(mesh, S._bspec(cell.global_batch, mesh, None))
+    fn = jax.jit(make_serve_step(cfg),
+                 in_shardings=(params_sh, caches_sh, tok_sh),
+                 donate_argnums=1)
+    return fn.lower(params, caches, tokens)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir=None,
+             verbose=True, profile: str = "tp", no_remat: bool = False):
+    import dataclasses
+    from repro.sharding.rules import profile_context
+    cfg = get_config(arch)
+    if no_remat:
+        cfg = dataclasses.replace(cfg, remat=False)
+    cell = shape_cell(shape)
+    cell_id = f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}"
+    if profile != "tp":
+        cell_id += f"__{profile}"
+    if no_remat:
+        cell_id += "__noremat"
+    skip = cell_applicable(cfg, cell)
+    rec = {"arch": arch, "shape": shape, "profile": profile,
+           "mesh": "2x16x16" if multi_pod else "16x16", "cell": cell_id}
+    if skip:
+        rec["status"] = "skipped"
+        rec["reason"] = skip
+        _emit(rec, out_dir, cell_id, verbose)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        with profile_context(profile), mesh_context(mesh), mesh:
+            t0 = time.time()
+            lowered = lower_cell(cfg, cell, mesh)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+            mem = compiled.memory_analysis()
+            if verbose:
+                print(f"== {cell_id}: memory_analysis ==")
+                print(mem)
+            ccost = compiled_cost(compiled)
+            if verbose:
+                print(f"== {cell_id}: cost_analysis == {ccost} "
+                      "(scan bodies counted once — see flops_model)")
+            roof = analyze(
+                compiled, model_flops_for(cfg, cell), mesh.devices.size,
+                analytic_flops=step_flops(cfg, cell),
+                analytic_bytes=step_hbm_bytes(
+                    cfg, cell, optimizer_name(cfg)))
+            rec.update(status="ok", t_lower_s=t_lower,
+                       t_compile_s=t_compile,
+                       memory_analysis=_mem_dict(mem),
+                       compiled_cost=ccost,
+                       roofline=roof.to_dict())
+            if verbose:
+                print(f"== {cell_id}: roofline == "
+                      f"bottleneck={roof.bottleneck} "
+                      f"t_comp={roof.t_compute:.4g}s "
+                      f"t_mem={roof.t_memory:.4g}s "
+                      f"t_coll={roof.t_collective:.4g}s "
+                      f"useful={roof.useful_flops_ratio:.3f} "
+                      f"mfu_bound={roof.mfu_bound:.3f}")
+    except Exception as e:  # noqa
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"== {cell_id}: ERROR ==\n{rec['error']}")
+    _emit(rec, out_dir, cell_id, verbose=False)
+    return rec
+
+
+def _mem_dict(mem):
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        try:
+            out[attr] = int(getattr(mem, attr))
+        except Exception:  # noqa
+            pass
+    if not out:
+        out["repr"] = str(mem)[:2000]
+    return out
+
+
+def _emit(rec, out_dir, cell_id, verbose):
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, cell_id + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    if verbose:
+        print(json.dumps({k: v for k, v in rec.items()
+                          if k != "traceback"}, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--multi-pod", default="no",
+                    choices=["no", "yes", "both"])
+    ap.add_argument("--profile", default="tp", choices=["tp", "fsdp"],
+                    help="sharding profile (sharding/rules.PROFILES)")
+    ap.add_argument("--no-remat", action="store_true",
+                    help="disable activation checkpointing (§Perf knob)")
+    ap.add_argument("--out-dir", default=None)
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.shape == "all" \
+        else [args.shape]
+    pods = {"no": [False], "yes": [True], "both": [False, True]}[
+        args.multi_pod]
+    failed = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                rec = run_cell(arch, shape, mp, args.out_dir,
+                               profile=args.profile,
+                               no_remat=args.no_remat)
+                if rec["status"] == "error":
+                    failed += 1
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

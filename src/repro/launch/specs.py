@@ -1,0 +1,180 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+No device allocation happens here — everything is abstract, so the 1T
+kimi-k2 cell lowers on a laptop.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as tf
+from repro.models.attention import cache_logical
+from repro.models.params import tree_abstract, tree_pspecs
+from repro.optim import Optimizer
+from repro.sharding.rules import logical_to_spec
+from repro.train import init_train_state
+
+
+def batch_axes_for(b: int, mesh: Mesh) -> Tuple[str, ...]:
+    """Largest prefix of the active profile's batch axes whose product
+    divides the batch (tp: (pod,data); fsdp: (pod,data,model))."""
+    from repro.sharding.rules import PROFILES, get_profile
+    rule = PROFILES[get_profile()]["batch"]
+    axes, prod = [], 1
+    for a in rule:
+        if a in mesh.axis_names and b % (prod * mesh.shape[a]) == 0:
+            axes.append(a)
+            prod *= mesh.shape[a]
+    return tuple(axes)
+
+
+def _bspec(b: int, mesh: Mesh, *trailing) -> P:
+    axes = batch_axes_for(b, mesh)
+    return P(axes if axes else None, *trailing)
+
+
+def model_decl(cfg: ModelConfig):
+    return (encdec_lib.decl(cfg) if cfg.family == "encdec"
+            else tf.decl(cfg))
+
+
+def abstract_params(cfg: ModelConfig):
+    return tree_abstract(model_decl(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh):
+    return tree_pspecs(model_decl(cfg), mesh)
+
+
+def opt_pspecs(cfg: ModelConfig, optimizer_name: str, mesh: Mesh):
+    pspecs = param_pspecs(cfg, mesh)
+    if optimizer_name == "adamw":
+        return {"mu": pspecs, "nu": pspecs, "count": P()}
+    if optimizer_name == "adafactor":
+        decls = model_decl(cfg)
+
+        def one(d, spec):
+            parts = list(spec) + [None] * (len(d.shape) - len(spec))
+            if len(d.shape) >= 2:
+                return {"vr": P(*parts[:-1]), "vc": P(*(parts[:-2]
+                                                        + parts[-1:]))}
+            return {"v": P(*parts)}
+        from repro.models.params import PDecl
+        m = jax.tree_util.tree_map(
+            one, decls, pspecs,
+            is_leaf=lambda x: isinstance(x, PDecl))
+        return {"m": m, "count": P()}
+    raise ValueError(optimizer_name)
+
+
+def train_state_pspecs(cfg: ModelConfig, optimizer_name: str, mesh: Mesh):
+    from repro.train.step import TrainState
+    return TrainState(param_pspecs(cfg, mesh),
+                      opt_pspecs(cfg, optimizer_name, mesh), P())
+
+
+def abstract_train_state(cfg: ModelConfig, optimizer: Optimizer):
+    params = abstract_params(cfg)
+    return jax.eval_shape(lambda p: init_train_state(p, optimizer), params)
+
+
+# ----------------------------------------------------------- batches -----
+
+def batch_inputs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """Abstract model inputs for a train/prefill cell."""
+    b, s = cell.global_batch, cell.seq_len
+    dt = jnp.dtype(cfg.compute_dtype)
+    tok = lambda n: jax.ShapeDtypeStruct((b, n), jnp.int32)
+    if cfg.family == "encdec":
+        return {"frames": jax.ShapeDtypeStruct((b, cfg.n_frames,
+                                                cfg.d_model), dt),
+                "tokens": tok(s), "labels": tok(s)}
+    if cfg.n_patches:
+        return {"patch_embeds": jax.ShapeDtypeStruct(
+                    (b, cfg.n_patches, cfg.d_model), dt),
+                "tokens": tok(s - cfg.n_patches),
+                "labels": tok(s - cfg.n_patches)}
+    return {"tokens": tok(s), "labels": tok(s)}
+
+
+def batch_pspecs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh):
+    b = cell.global_batch
+    out = {"tokens": _bspec(b, mesh, None), "labels": _bspec(b, mesh, None)}
+    if cfg.family == "encdec":
+        out["frames"] = _bspec(b, mesh, None, None)
+    if cfg.n_patches:
+        out["patch_embeds"] = _bspec(b, mesh, None, None)
+    return out
+
+
+# ------------------------------------------------------------ caches -----
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int):
+    dt = jnp.dtype(cfg.compute_dtype)
+    if cfg.family == "encdec":
+        enc = jax.ShapeDtypeStruct((batch, cfg.n_frames, cfg.d_model), dt)
+        params = abstract_params(cfg)
+        return jax.eval_shape(
+            lambda p, e: encdec_lib.init_dec_caches(cfg, p, e, batch,
+                                                    max_len, dt),
+            params, enc)
+    return jax.eval_shape(
+        lambda: tf.init_caches(cfg, batch, max_len, dt))
+
+
+def cache_pspecs(cfg: ModelConfig, caches_abstract, batch: int, mesh: Mesh):
+    """Spec tree matching the cache pytree: KV (B,S,KV,hd) per
+    cache_logical; SSM conv (B,W,CH) / state (B,H,N,P); leading stacked
+    layer axes replicated; scalar lengths replicated."""
+    model_size = mesh.shape.get("model", 1)
+    kv_logical = cache_logical(cfg, model_size)
+    baxes = batch_axes_for(batch, mesh)
+    bspec = baxes if baxes else None
+
+    def spec_for(leaf: jax.ShapeDtypeStruct):
+        shp = leaf.shape
+        nd = len(shp)
+        if nd == 0 or shp[-1] == 0:
+            return P()
+        kv, hd = cfg.n_kv_heads, cfg.hd
+        di = cfg.ssm_expand * cfg.d_model
+        h_ssm = di // cfg.ssm_head_dim if cfg.ssm_head_dim else 0
+        # KV cache leaf: (..., B, S, KV, hd)
+        if nd >= 4 and shp[-2:] == (kv, hd) and shp[-4] == batch:
+            lead = [None] * (nd - 4)
+            kvspec = [logical_to_spec(kv_logical, mesh)[i] for i in
+                      range(4)]
+            return P(*(lead + [bspec] + list(kvspec[1:])))
+        # SSM state leaf: (..., B, H, N, Pdim)
+        if nd >= 4 and h_ssm and shp[-3:] == (h_ssm, cfg.ssm_state,
+                                              cfg.ssm_head_dim) \
+                and shp[-4] == batch:
+            lead = [None] * (nd - 4)
+            return P(*(lead + [bspec, "model" if h_ssm % model_size == 0
+                               else None, None, None]))
+        # conv state leaf: (..., B, W-1, CH)
+        if nd >= 3 and shp[-2] == cfg.ssm_conv - 1 and shp[-3] == batch:
+            lead = [None] * (nd - 3)
+            ch = shp[-1]
+            return P(*(lead + [bspec, None,
+                               "model" if ch % model_size == 0 else None]))
+        # scalar lengths stacked (L,) etc.
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map(spec_for, caches_abstract)
+
+
+def decode_inputs(cfg: ModelConfig, cell: ShapeCell):
+    """(caches_abstract, tokens_abstract) for a decode cell — cache is
+    prefilled to seq_len, serve_step adds 1 token."""
+    b = cell.global_batch
+    caches = abstract_caches(cfg, b, cell.seq_len)
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    return caches, tokens

@@ -1,0 +1,4 @@
+from . import attention, encdec, layers, mamba, moe, params, transformer
+
+__all__ = ["attention", "encdec", "layers", "mamba", "moe", "params",
+           "transformer"]

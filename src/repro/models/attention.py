@@ -1,0 +1,231 @@
+"""GQA attention with RoPE, KV-chunked training path and cached decode.
+
+TP notes (§Perf iteration 1): the 4D (B,S,H,hd) head axis must divide
+the model mesh axis or GSPMD improvises — it splits head_dim instead,
+turning Q·Kᵀ into a partial contraction that all-reduces the full score
+tensor per KV-chunk per layer (observed 2.6 TB/device on starcoder2
+prefill_32k).  We therefore (a) pad Q heads per KV group to the model
+quantum (36→48, 12→16; padded slots masked dead so the architecture is
+config-exact), (b) explicitly replicate the 4D K/V when n_kv_heads
+doesn't divide the model axis (K/V are small; replication ≪ score
+all-reduce), (c) explicitly constrain the 4D Q to head sharding.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import constrain, get_mesh
+from .layers import apply_rope
+from .params import PDecl
+
+NEG_INF = -1e30
+
+
+def attention_decl(cfg, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads_padded, cfg.n_kv_heads, cfg.hd
+    decl = {
+        "wq": PDecl((d, h * hd), ("embed", "heads")),
+        "wk": PDecl((d, kv * hd), ("embed", "kv_heads")),
+        "wv": PDecl((d, kv * hd), ("embed", "kv_heads")),
+        "wo": PDecl((h * hd, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        decl.update({
+            "bq": PDecl((h * hd,), ("heads",), "zeros"),
+            "bk": PDecl((kv * hd,), ("kv_heads",), "zeros"),
+            "bv": PDecl((kv * hd,), ("kv_heads",), "zeros"),
+        })
+    return decl
+
+
+def head_mask(cfg, dtype) -> Optional[jax.Array]:
+    """(H_pad,) 1/0 mask killing padded Q-head slots (slot r within each
+    KV group is real iff r < rep).  None when no padding."""
+    hp, h, kv = cfg.n_heads_padded, cfg.n_heads, cfg.n_kv_heads
+    if hp == h:
+        return None
+    rep, rep_pad = h // kv, hp // kv
+    m = (jnp.arange(hp) % rep_pad) < rep
+    return m.astype(dtype)
+
+
+def _kv_logical(cfg) -> Optional[str]:
+    """Shard 4D K/V on kv_heads only when it divides the model axis;
+    otherwise replicate them explicitly (the cheap, predictable layout)."""
+    mesh = get_mesh()
+    ms = mesh.shape.get("model", 1) if mesh is not None else 1
+    return "kv_heads" if cfg.n_kv_heads % max(ms, 1) == 0 else None
+
+
+class KVCache(NamedTuple):
+    k: jax.Array        # (B, S_max, KV, hd)
+    v: jax.Array        # (B, S_max, KV, hd)
+    length: jax.Array   # () int32 — filled positions
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> KVCache:
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    z = jnp.zeros((batch, max_len, kv, hd), dtype)
+    return KVCache(z, z, jnp.int32(0))
+
+
+def cache_logical(cfg, mesh_model: int):
+    """Logical axes for the KV cache given the model-axis size."""
+    if cfg.n_kv_heads % max(mesh_model, 1) == 0:
+        return ("batch", "seq", "kv_heads", None)
+    return ("batch", "seq", None, "kv_heads")  # shard head_dim instead
+
+
+def _project(cfg, p, x):
+    h, kv, hd = cfg.n_heads_padded, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dq->bsq", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dq->bsq", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    b, s = x.shape[:2]
+    kvlog = _kv_logical(cfg)
+    q = constrain(q.reshape(b, s, h, hd), "batch", "seq", "heads", None)
+    k = constrain(k.reshape(b, s, kv, hd), "batch", "seq", kvlog, None)
+    v = constrain(v.reshape(b, s, kv, hd), "batch", "seq", kvlog, None)
+    return q, k, v
+
+
+def _sdpa(q, k, v, *, causal: bool, q_offset, scale: float,
+          chunk: int = 0):
+    """softmax(q·kᵀ)·v with GQA head repetition.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd).  ``q_offset`` is the absolute
+    position of q[0] (for causal masking against a longer KV).
+    When ``chunk`` > 0 and Sk > chunk, iterate KV blocks with an online
+    softmax (flash-style) so peak memory is O(Sq·chunk), not O(Sq·Sk).
+    """
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    # inputs stay bf16 (collective/matmul cost); accumulation is f32
+    qf = (q * scale).astype(q.dtype).reshape(b, sq, kv, rep, hd)
+    kf, vf = k, v
+    qpos = q_offset + jnp.arange(sq)
+
+    def block(ks, vs, k0):
+        s = jnp.einsum("bqgrh,bkgh->bgrqk", qf, ks,
+                       preferred_element_type=jnp.float32)
+        if causal:
+            kpos = k0 + jnp.arange(ks.shape[1])
+            mask = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        return s, vs
+
+    if chunk and sk > chunk and sk % chunk == 0:
+        nb = sk // chunk
+        kb = kf.reshape(b, nb, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+        vb = vf.reshape(b, nb, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+
+        def step(carry, blk):
+            m, l, acc, k0 = carry
+            ks, vs = blk
+            s, vs = block(ks, vs, k0)
+            m_new = jnp.maximum(m, s.max(-1))
+            p_ = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p_.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bgrqk,bkgh->bgrqh", p_.astype(vs.dtype), vs,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc, k0 + chunk), None
+
+        m0 = jnp.full((b, kv, rep, sq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, rep, sq), jnp.float32)
+        a0 = jnp.zeros((b, kv, rep, sq, hd), jnp.float32)
+        (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, a0, jnp.int32(0)),
+                                         (kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+    else:
+        s, vs = block(kf, vf, jnp.int32(0))
+        p_ = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bgrqk,bkgh->bgrqh", p_.astype(vs.dtype), vs,
+                         preferred_element_type=jnp.float32)
+
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+
+
+def attention_with_kv(cfg, p, x, k, v):
+    """Cross-attention against precomputed K/V (decode path)."""
+    b, s, _ = x.shape
+    hp = cfg.n_heads_padded
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+    q = q.reshape(b, s, hp, cfg.hd)
+    out = _sdpa(q, k.astype(x.dtype), v.astype(x.dtype), causal=False,
+                q_offset=jnp.int32(0), scale=cfg.hd ** -0.5,
+                chunk=cfg.attn_chunk)
+    hm = head_mask(cfg, out.dtype)
+    if hm is not None:
+        out = out * hm[None, None, :, None]
+    out = out.reshape(b, s, hp * cfg.hd).astype(x.dtype)
+    return jnp.einsum("bsq,qd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def attention(cfg, p, x, *, causal=True, positions=None,
+              cache: Optional[KVCache] = None, kv_input=None):
+    """Full attention layer.  Returns (y, new_cache).
+
+    * training/prefill: ``cache is None`` → self-attention over x.
+    * decode: ``cache`` holds past KV; x is the (B, 1, D) new token slice.
+    * cross-attention: ``kv_input`` supplies the encoder sequence (no
+      cache update semantics beyond first fill).
+    """
+    b, s, d = x.shape
+    scale = cfg.hd ** -0.5
+    if kv_input is None:
+        q, k, v = _project(cfg, p, x)
+    else:
+        q = jnp.einsum("bsd,dq->bsq", x, p["wq"].astype(x.dtype))
+        if cfg.qkv_bias:
+            q = q + p["bq"].astype(x.dtype)
+        q = q.reshape(b, s, cfg.n_heads_padded, cfg.hd)
+        kx = kv_input
+        k = jnp.einsum("bsd,dq->bsq", kx, p["wk"].astype(x.dtype)).reshape(
+            b, kx.shape[1], cfg.n_kv_heads, cfg.hd)
+        v = jnp.einsum("bsd,dq->bsq", kx, p["wv"].astype(x.dtype)).reshape(
+            b, kx.shape[1], cfg.n_kv_heads, cfg.hd)
+
+    if cfg.pos == "rope" and kv_input is None:
+        if positions is None:
+            base = cache.length if cache is not None else 0
+            positions = base + jnp.arange(s)
+            positions = jnp.broadcast_to(positions, (b, s))
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        k_all = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, cache.length, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, cache.length, 0, 0))
+        new_cache = KVCache(k_all, v_all, cache.length + s)
+        q_off = cache.length
+        # mask beyond filled length: positions > length+s-1 get NEG_INF via
+        # causal mask (cache zeros sit at kpos > qpos, masked out).
+        out = _sdpa(q, k_all, v_all, causal=True, q_offset=q_off,
+                    scale=scale, chunk=cfg.attn_chunk)
+    else:
+        out = _sdpa(q, k, v, causal=causal and kv_input is None,
+                    q_offset=jnp.int32(0), scale=scale,
+                    chunk=cfg.attn_chunk)
+
+    hm = head_mask(cfg, out.dtype)
+    if hm is not None:
+        out = out * hm[None, None, :, None]
+    out = out.reshape(b, s, cfg.n_heads_padded * cfg.hd).astype(x.dtype)
+    out = constrain(out, "batch", "seq", "heads")
+    y = jnp.einsum("bsq,qd->bsd", out, p["wo"].astype(x.dtype))
+    return y, new_cache

@@ -1,0 +1,168 @@
+"""Encoder–decoder backbone (whisper-medium family).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs``
+supplies precomputed frame embeddings (B, n_frames, D).  Encoder =
+bidirectional attention blocks; decoder = causal self-attn + cross-attn
+blocks with learned positions.  Cross-attention K/V are computed once at
+prefill and carried in the cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.rules import constrain
+from . import attention as attn_lib
+from .layers import embed_decl, mlp, mlp_decl, norm, norm_decl
+from .params import PDecl, stack_layers
+
+
+def _enc_block_decl(cfg):
+    return {"ln1": norm_decl(cfg), "attn": attn_lib.attention_decl(cfg),
+            "ln2": norm_decl(cfg), "mlp": mlp_decl(cfg)}
+
+
+def _dec_block_decl(cfg):
+    return {"ln1": norm_decl(cfg), "self_attn": attn_lib.attention_decl(cfg),
+            "ln2": norm_decl(cfg), "cross_attn": attn_lib.attention_decl(cfg),
+            "ln3": norm_decl(cfg), "mlp": mlp_decl(cfg)}
+
+
+def decl(cfg: ModelConfig):
+    return {
+        "embed": embed_decl(cfg),
+        "dec_pos": {"table": PDecl((cfg.max_target_positions, cfg.d_model),
+                                   (None, "embed"), "embed",
+                                   scale=cfg.d_model ** -0.5)},
+        "enc_pos": {"table": PDecl((cfg.n_frames, cfg.d_model),
+                                   (None, "embed"), "embed",
+                                   scale=cfg.d_model ** -0.5)},
+        "enc_blocks": stack_layers(lambda: _enc_block_decl(cfg),
+                                   cfg.n_enc_layers),
+        "dec_blocks": stack_layers(lambda: _dec_block_decl(cfg),
+                                   cfg.n_layers),
+        "enc_norm": norm_decl(cfg),
+        "final_norm": norm_decl(cfg),
+    }
+
+
+class DecCache(NamedTuple):
+    self_kv: attn_lib.KVCache
+    cross_k: jax.Array     # (B, S_enc, KV, hd)
+    cross_v: jax.Array
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames: (B, n_frames, D) stub embeddings → encoder states."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(dt)
+    pos = params["enc_pos"]["table"][:x.shape[1]].astype(dt)
+    x = x + pos[None]
+    x = constrain(x, "batch", "seq", "act_embed")
+
+    def body(x, p):
+        h = norm(cfg, p["ln1"], x)
+        a, _ = attn_lib.attention(cfg, p["attn"], h, causal=False)
+        x = x + a
+        h = norm(cfg, p["ln2"], x)
+        x = x + mlp(cfg, p["mlp"], h)
+        return x
+
+    fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    x, _ = jax.lax.scan(lambda c, p: (fn(c, p), 0), x,
+                        params["enc_blocks"])
+    return norm(cfg, params["enc_norm"], x)
+
+
+def _dec_block(cfg, p, x, enc, cache: Optional[DecCache], positions):
+    h = norm(cfg, p["ln1"], x)
+    a, new_kv = attn_lib.attention(
+        cfg, p["self_attn"], h, causal=True, positions=positions,
+        cache=cache.self_kv if cache is not None else None)
+    x = x + a
+    h = norm(cfg, p["ln2"], x)
+    if cache is not None:   # decode: precomputed cross K/V
+        ca = attn_lib.attention_with_kv(cfg, p["cross_attn"], h,
+                                        cache.cross_k, cache.cross_v)
+    else:
+        ca, _ = attn_lib.attention(cfg, p["cross_attn"], h, causal=False,
+                                   kv_input=enc)
+    x = x + ca
+    h = norm(cfg, p["ln3"], x)
+    x = x + mlp(cfg, p["mlp"], h)
+    x = constrain(x, "batch", "seq", "act_embed")
+    new_cache = (DecCache(new_kv, cache.cross_k, cache.cross_v)
+                 if cache is not None else None)
+    return x, new_cache
+
+
+def decode(cfg: ModelConfig, params, tokens, enc, *, caches=None):
+    """Decoder forward.  Returns hidden (train) or (hidden, caches)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    from .layers import embed
+    x = embed(params["embed"], tokens, dt)
+    if caches is not None:
+        ln = caches.self_kv.length
+        base = ln[0] if ln.ndim else ln
+    else:
+        base = 0
+    pos = base + jnp.arange(x.shape[1])
+    table = params["dec_pos"]["table"]
+    x = x + jnp.take(table, jnp.minimum(pos, table.shape[0] - 1),
+                     axis=0).astype(dt)[None]
+    x = constrain(x, "batch", "seq", "act_embed")
+
+    decoding = caches is not None
+    body = functools.partial(_dec_block, cfg)
+    if cfg.remat and not decoding:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    if decoding:
+        def step(carry, layer):
+            p, c = layer
+            y, nc = body(p, carry, None, c, None)
+            return y, nc
+        x, new_caches = jax.lax.scan(step, x, (params["dec_blocks"], caches))
+        x = norm(cfg, params["final_norm"], x)
+        return x, new_caches
+
+    x, _ = jax.lax.scan(
+        lambda c, p: (body(p, c, enc, None, None)[0], 0),
+        x, params["dec_blocks"])
+    return norm(cfg, params["final_norm"], x)
+
+
+def init_dec_caches(cfg: ModelConfig, params, enc, batch: int,
+                    max_len: int, dtype=jnp.bfloat16):
+    """Precompute stacked cross K/V from encoder states; empty self caches."""
+    kv, hd = cfg.n_kv_heads, cfg.hd
+
+    def cross_kv(p):
+        k = jnp.einsum("bsd,dq->bsq", enc,
+                       p["cross_attn"]["wk"].astype(enc.dtype))
+        v = jnp.einsum("bsd,dq->bsq", enc,
+                       p["cross_attn"]["wv"].astype(enc.dtype))
+        b, s = enc.shape[:2]
+        return (k.reshape(b, s, kv, hd).astype(dtype),
+                v.reshape(b, s, kv, hd).astype(dtype))
+
+    ck, cv = jax.vmap(cross_kv)(params["dec_blocks"])   # (L, B, S, KV, hd)
+    self_kv = jax.tree_util.tree_map(
+        lambda a: (jnp.broadcast_to(a, (cfg.n_layers,) + a.shape)
+                   if a.ndim else jnp.zeros((cfg.n_layers,), a.dtype)),
+        attn_lib.init_cache(cfg, batch, max_len, dtype))
+    return DecCache(self_kv, ck, cv)
+
+
+def logits_fn(cfg, params, hidden):
+    table = params["embed"]["table"]
+    logits = jnp.einsum("bsd,vd->bsv", hidden, table.astype(hidden.dtype))
+    if cfg.vocab_padded != cfg.vocab:
+        pad = cfg.vocab_padded - cfg.vocab
+        neg = jnp.full(logits.shape[:-1] + (pad,), -1e30, logits.dtype)
+        logits = jnp.concatenate([logits[..., :cfg.vocab], neg], axis=-1)
+    return logits

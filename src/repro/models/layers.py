@@ -1,0 +1,116 @@
+"""Shared building blocks: norms, activations, RoPE, MLP."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import constrain
+from .params import PDecl
+
+
+# ------------------------------------------------------------- norms -----
+
+def rmsnorm_decl(d: int):
+    return {"scale": PDecl((d,), (None,), "ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_decl(d: int):
+    return {"scale": PDecl((d,), (None,), "ones"),
+            "bias": PDecl((d,), (None,), "zeros")}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+def norm_decl(cfg, d: Optional[int] = None):
+    d = d or cfg.d_model
+    return layernorm_decl(d) if cfg.norm == "layernorm" else rmsnorm_decl(d)
+
+
+def norm(cfg, p, x):
+    return layernorm(p, x) if cfg.norm == "layernorm" else rmsnorm(p, x)
+
+
+# ------------------------------------------------------------- RoPE ------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                 # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (.., S, hd/2)
+    if angles.ndim == 2:                                # (S, hd/2)
+        angles = angles[None]
+    angles = angles[:, :, None, :]                      # (B, S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- MLP -------
+
+def mlp_decl(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    gated = cfg.act in ("swiglu", "geglu")
+    decl = {
+        "w_in": PDecl((d, (2 if gated else 1) * f), ("embed", "mlp")),
+        "w_out": PDecl((f, d), ("mlp", "embed")),
+    }
+    if cfg.mlp_bias:
+        decl["b_in"] = PDecl(((2 if gated else 1) * f,), ("mlp",), "zeros")
+        decl["b_out"] = PDecl((d,), (None,), "zeros")
+    return decl
+
+
+def mlp(cfg, p, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(x.dtype))
+    if "b_in" in p:
+        h = h + p["b_in"].astype(x.dtype)
+    if cfg.act in ("swiglu", "geglu"):
+        u, g = jnp.split(h, 2, axis=-1)
+        h = u * (jax.nn.silu(g) if cfg.act == "swiglu"
+                 else jax.nn.gelu(g, approximate=True))
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    h = constrain(h, "batch", "seq", "act_mlp")
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_out"].astype(x.dtype))
+    if "b_out" in p:
+        y = y + p["b_out"].astype(x.dtype)
+    return y
+
+
+# --------------------------------------------------------- embeddings ----
+
+def embed_decl(cfg):
+    return {"table": PDecl((cfg.vocab_padded, cfg.d_model), ("vocab", "embed"),
+                           "embed", scale=cfg.d_model ** -0.5)}
+
+
+def embed(p, tokens, dtype):
+    return jnp.take(p["table"].astype(dtype), tokens, axis=0)
+
+
+def unembed(p, x):
+    """x (B,S,D) → logits (B,S,V) against the (tied or separate) table."""
+    return jnp.einsum("bsd,vd->bsv", x, p["table"].astype(x.dtype))

@@ -1,0 +1,191 @@
+"""Mamba2 (SSD — state-space duality) block, chunked matmul formulation.
+
+The chunked algorithm turns the linear recurrence into MXU-friendly
+batched matmuls: an intra-chunk quadratic term (attention-like, but over
+chunk length L=256 only) + an inter-chunk state recurrence (lax.scan over
+S/L carries of (H, N, P) states).  Verified against the sequential-scan
+oracle in tests/test_mamba.py.
+
+Sharding: SSM heads are sharded over `model` (80/16, 112/16 both divide);
+states are tiny and replicated over data-batch shards.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import constrain
+from .layers import rmsnorm
+from .params import PDecl
+
+
+def mamba_dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    nheads = di // cfg.ssm_head_dim
+    return di, nheads, cfg.ssm_groups, cfg.ssm_state
+
+
+def mamba_decl(cfg):
+    d = cfg.d_model
+    di, h, g, n = mamba_dims(cfg)
+    conv_ch = di + 2 * g * n
+    return {
+        "wz": PDecl((d, di), ("embed", "mlp")),
+        "wx": PDecl((d, di), ("embed", "mlp")),
+        "wB": PDecl((d, g * n), ("embed", None)),
+        "wC": PDecl((d, g * n), ("embed", None)),
+        "wdt": PDecl((d, h), ("embed", "heads")),
+        "conv_w": PDecl((cfg.ssm_conv, conv_ch), ("conv", "mlp")),
+        "conv_b": PDecl((conv_ch,), ("mlp",), "zeros"),
+        "A_log": PDecl((h,), ("heads",), "zeros"),
+        "D_skip": PDecl((h,), ("heads",), "ones"),
+        "dt_bias": PDecl((h,), ("heads",), "zeros"),
+        "norm_scale": PDecl((di,), ("mlp",), "ones"),
+        "w_out": PDecl((di, d), ("mlp", "embed")),
+    }
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # (B, conv_width-1, conv_channels)
+    ssm: jax.Array    # (B, H, N, P) f32
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.bfloat16) -> MambaCache:
+    di, h, g, n = mamba_dims(cfg)
+    conv_ch = di + 2 * g * n
+    return MambaCache(
+        jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        jnp.zeros((batch, h, n, cfg.ssm_head_dim), jnp.float32))
+
+
+def _segsum(x):
+    """x: (..., L) → (..., L, L); out[i,j] = Σ_{j<k≤i} x_k, -inf above diag."""
+    l = x.shape[-1]
+    c = jnp.cumsum(x, -1)
+    ss = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b_mat, c_mat, d_skip, *, chunk: int,
+                init_state=None):
+    """SSD over a full sequence.
+
+    x: (B,S,H,P) pre-discretization inputs; dt: (B,S,H) post-softplus;
+    b_mat, c_mat: (B,S,H,N) (groups already repeated to heads).
+    Returns (y (B,S,H,P) f32, final_state (B,H,N,P) f32).
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    l = min(chunk, s)
+    nc = s // l
+    assert s % l == 0, (s, l)
+
+    a = (-jnp.exp(a_log.astype(jnp.float32)) * dt)       # (B,S,H) dA
+    xd = x.astype(jnp.float32) * dt[..., None]           # X = x·dt
+
+    def blk(t, shape):
+        return t.reshape((bsz, nc, l) + shape)
+    a_b = blk(a, (h,))
+    x_b = blk(xd, (h, p))
+    bb = blk(b_mat.astype(jnp.float32), (h, n))
+    cb = blk(c_mat.astype(jnp.float32), (h, n))
+
+    a_cum = jnp.cumsum(a_b, axis=2)                      # (B,C,L,H)
+    lmat = jnp.exp(_segsum(a_b.transpose(0, 1, 3, 2)))   # (B,C,H,L,L)
+
+    scores = jnp.einsum("bclhn,bcshn->bchls", cb, bb) * lmat
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", scores, x_b)
+
+    decay_states = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (B,C,L,H)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchnp", bb, decay_states, x_b)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])            # (B,C,H)
+
+    def step(carry, inp):
+        st_c, t_c = inp                                  # (B,H,N,P), (B,H)
+        init = carry
+        new = t_c[:, :, None, None] * init + st_c
+        return new, init
+
+    s0 = (jnp.zeros((bsz, h, n, p), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final, inits = jax.lax.scan(
+        step, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    inits = inits.transpose(1, 0, 2, 3, 4)               # (B,C,H,N,P)
+
+    y_off = jnp.einsum("bclhn,bchnp->bclhp", cb, inits) \
+        * jnp.exp(a_cum)[..., None]
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    y = y + d_skip.astype(jnp.float32)[None, None, :, None] \
+        * x.astype(jnp.float32)
+    return y, final
+
+
+def ssd_decode_step(state, x, dt, a_log, b_mat, c_mat, d_skip):
+    """One-token SSD update.  x: (B,H,P); b/c: (B,H,N); state: (B,H,N,P)."""
+    a = -jnp.exp(a_log.astype(jnp.float32)) * dt          # (B,H)
+    xd = x.astype(jnp.float32) * dt[..., None]
+    new = jnp.exp(a)[:, :, None, None] * state + \
+        jnp.einsum("bhn,bhp->bhnp", b_mat.astype(jnp.float32), xd)
+    y = jnp.einsum("bhn,bhnp->bhp", c_mat.astype(jnp.float32), new)
+    y = y + d_skip.astype(jnp.float32)[None, :, None] * x.astype(jnp.float32)
+    return y, new
+
+
+def _conv_causal(p, xbc, conv_state=None):
+    """Depthwise causal conv, width cfg.ssm_conv.  xbc: (B,S,CH)."""
+    w = p["conv_w"].astype(xbc.dtype)                    # (W, CH)
+    width = w.shape[0]
+    if conv_state is not None:
+        ctx = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    else:
+        ctx = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(ctx[:, i:i + xbc.shape[1], :] * w[i] for i in range(width))
+    out = out + p["conv_b"].astype(xbc.dtype)
+    new_state = ctx[:, -(width - 1):, :] if width > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def mamba_block(cfg, p, x, *, cache: Optional[MambaCache] = None):
+    """Full Mamba2 mixer.  x: (B,S,D) → (y, new_cache)."""
+    bsz, s, d = x.shape
+    di, h, g, n = mamba_dims(cfg)
+    rep = h // g
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(x.dtype))
+    z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(x.dtype))
+    xi = jnp.einsum("bsd,de->bse", x, p["wx"].astype(x.dtype))
+    bproj = jnp.einsum("bsd,de->bse", x, p["wB"].astype(x.dtype))
+    cproj = jnp.einsum("bsd,de->bse", x, p["wC"].astype(x.dtype))
+
+    xbc = jnp.concatenate([xi, bproj, cproj], axis=-1)
+    conv_in = cache.conv if cache is not None else None
+    xbc, new_conv = _conv_causal(p, xbc, conv_in)
+    xi, bproj, cproj = jnp.split(xbc, [di, di + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    xh = xi.reshape(bsz, s, h, cfg.ssm_head_dim)
+    xh = constrain(xh, "batch", "seq", "act_heads", None)
+    bm = jnp.repeat(bproj.reshape(bsz, s, g, n), rep, axis=2)
+    cm = jnp.repeat(cproj.reshape(bsz, s, g, n), rep, axis=2)
+
+    if cache is not None and s == 1:
+        y, new_ssm = ssd_decode_step(
+            cache.ssm, xh[:, 0], dt[:, 0], p["A_log"], bm[:, 0], cm[:, 0],
+            p["D_skip"])
+        y = y[:, None]
+    else:
+        init = cache.ssm if cache is not None else None
+        y, new_ssm = ssd_chunked(xh, dt, p["A_log"], bm, cm, p["D_skip"],
+                                 chunk=cfg.ssm_chunk, init_state=init)
+
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = rmsnorm({"scale": p["norm_scale"]}, y * jax.nn.silu(z))
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    new_cache = (MambaCache(new_conv, new_ssm)
+                 if cache is not None else None)
+    return out, new_cache

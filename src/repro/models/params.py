@@ -1,0 +1,83 @@
+"""Declarative parameter trees.
+
+Models declare a nested dict of ``PDecl`` (shape + logical axes + init);
+from that single source of truth we derive:
+  * real initialized params (smoke tests / examples),
+  * ShapeDtypeStruct params (dry-run lowering — a 1T-param model never
+    allocates host memory),
+  * the PartitionSpec tree for in_shardings (via `sharding.rules`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import logical_to_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class PDecl:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | embed
+    scale: Optional[float] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _is_decl(x):
+    return isinstance(x, PDecl)
+
+
+def tree_init(key: jax.Array, tree, dtype=jnp.float32):
+    """Initialize a real param pytree from the declaration tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=_is_decl)
+    keys = jax.random.split(key, len(leaves))
+
+    def init_one(k, d: PDecl):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dtype)
+        if d.init == "embed":
+            return (jax.random.normal(k, d.shape, dtype)
+                    * (d.scale or 1.0))
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        scale = d.scale if d.scale is not None else 1.0 / math.sqrt(fan_in)
+        return jax.random.normal(k, d.shape, dtype) * scale
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [init_one(k, d) for k, d in zip(keys, leaves)])
+
+
+def tree_abstract(tree, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), tree,
+        is_leaf=_is_decl)
+
+
+def tree_pspecs(tree, mesh=None):
+    """PartitionSpec pytree from the logical axes (divisibility-safe)."""
+    return jax.tree_util.tree_map(
+        lambda d: logical_to_spec(d.logical, mesh, dims=d.shape), tree,
+        is_leaf=_is_decl)
+
+
+def n_params(tree) -> int:
+    return sum(math.prod(d.shape) for d in
+               jax.tree_util.tree_leaves(tree, is_leaf=_is_decl))
+
+
+def stack_layers(decl_fn, n: int):
+    """Add a leading scanned 'layers' axis to every decl in a subtree."""
+    sub = decl_fn()
+    return jax.tree_util.tree_map(
+        lambda d: PDecl((n,) + d.shape, ("layers",) + d.logical,
+                        d.init, d.scale),
+        sub, is_leaf=_is_decl)

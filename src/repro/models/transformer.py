@@ -1,0 +1,334 @@
+"""Decoder-LM assembly: dense / MoE / SSM / hybrid families.
+
+Layers are grouped into *stages*; each stage is a `lax.scan` over its
+stacked parameters (small HLO, fast multi-hundred-layer compiles) with
+optional full remat of the body.  Stage layout per family:
+
+  dense : [(block, L)]
+  moe   : [(dense_block, first_dense)?, (moe_block, L - first_dense)]
+  ssm   : [(mamba, L)]
+  hybrid: [(period = ssm_per_period×mamba + 1 shared-attn, n_periods),
+           (mamba, tail)]          # zamba2: 13×(5+1) + 3 = 81
+
+Shared-attention weights (zamba2) are closed over, not scanned — one
+parameter set applied at every period, the paper-accurate weight tying.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.rules import constrain
+from . import attention as attn_lib
+from . import mamba as mamba_lib
+from .layers import embed_decl, mlp, mlp_decl, norm, norm_decl
+from .moe import moe, moe_decl
+from .params import PDecl, stack_layers
+
+
+# ------------------------------------------------------------ declares ---
+
+def _attn_block_decl(cfg, ffn: str):
+    decl = {"ln1": norm_decl(cfg), "attn": attn_lib.attention_decl(cfg),
+            "ln2": norm_decl(cfg)}
+    if ffn == "moe":
+        decl["moe"] = moe_decl(cfg)
+    else:
+        decl["mlp"] = mlp_decl(cfg)
+    return decl
+
+
+def _mamba_block_decl(cfg):
+    return {"ln1": norm_decl(cfg), "mamba": mamba_lib.mamba_decl(cfg)}
+
+
+def stage_plan(cfg: ModelConfig):
+    """[(stage_kind, n_repeat)] — drives decls, apply, and cache layout."""
+    if cfg.family == "hybrid":
+        period = cfg.attn_period                       # mamba per period + 1
+        n_periods = cfg.n_layers // (period + 1)
+        tail = cfg.n_layers - n_periods * (period + 1)
+        plan = [("period", n_periods)]
+        if tail:
+            plan.append(("mamba", tail))
+        return plan
+    if cfg.family == "ssm":
+        return [("mamba", cfg.n_layers)]
+    if cfg.is_moe:
+        plan = []
+        if cfg.first_dense:
+            plan.append(("dense", cfg.first_dense))
+        plan.append(("moe", cfg.n_layers - cfg.first_dense))
+        return plan
+    return [("dense", cfg.n_layers)]
+
+
+def decl(cfg: ModelConfig) -> Dict[str, Any]:
+    d: Dict[str, Any] = {"embed": embed_decl(cfg),
+                         "final_norm": norm_decl(cfg)}
+    if not cfg.tie_embeddings:
+        d["lm_head"] = {"w": PDecl((cfg.d_model, cfg.vocab_padded),
+                                   ("embed", "vocab"))}
+    if cfg.pos == "learned":
+        d["pos_embed"] = {"table": PDecl(
+            (cfg.max_target_positions, cfg.d_model), (None, "embed"),
+            "embed", scale=cfg.d_model ** -0.5)}
+    stages = []
+    for kind, n in stage_plan(cfg):
+        if kind == "dense":
+            stages.append(stack_layers(
+                lambda: _attn_block_decl(cfg, "mlp"), n))
+        elif kind == "moe":
+            stages.append(stack_layers(
+                lambda: _attn_block_decl(cfg, "moe"), n))
+        elif kind == "mamba":
+            stages.append(stack_layers(lambda: _mamba_block_decl(cfg), n))
+        elif kind == "period":
+            stages.append({
+                "mambas": stack_layers(
+                    lambda: stack_layers(
+                        lambda: _mamba_block_decl(cfg), cfg.attn_period), n),
+            })
+    d["stages"] = stages
+    if cfg.family == "hybrid":
+        d["shared_attn"] = _attn_block_decl(cfg, "mlp")
+    return d
+
+
+# -------------------------------------------------------------- caches ---
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    """Stacked per-stage caches matching stage_plan."""
+    def kv(n):
+        one = attn_lib.init_cache(cfg, batch, max_len, dtype)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape) if a.ndim else
+            jnp.zeros((n,), a.dtype), one)
+
+    def mb(n):
+        one = mamba_lib.init_mamba_cache(cfg, batch, dtype)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape), one)
+
+    caches = []
+    for kind, n in stage_plan(cfg):
+        if kind in ("dense", "moe"):
+            caches.append(kv(n))
+        elif kind == "mamba":
+            caches.append(mb(n))
+        else:  # period
+            caches.append({
+                "mambas": jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(
+                        a, (n,) + a.shape),
+                    mb(cfg.attn_period)),
+                "attn": kv(n)})
+    return caches
+
+
+# --------------------------------------------------------------- blocks ---
+
+def _apply_attn_block(cfg, p, x, cache, ffn: str, positions=None):
+    h = norm(cfg, p["ln1"], x)
+    a, new_cache = attn_lib.attention(cfg, p["attn"], h, causal=True,
+                                      positions=positions, cache=cache)
+    x = x + a
+    h = norm(cfg, p["ln2"], x)
+    f = moe(cfg, p["moe"], h) if ffn == "moe" else mlp(cfg, p["mlp"], h)
+    x = x + f
+    x = constrain(x, "batch", "seq", "act_embed")
+    return x, new_cache
+
+
+def _apply_mamba_block(cfg, p, x, cache):
+    h = norm(cfg, p["ln1"], x)
+    m, new_cache = mamba_lib.mamba_block(cfg, p["mamba"], h, cache=cache)
+    x = x + m
+    x = constrain(x, "batch", "seq", "act_embed")
+    return x, new_cache
+
+
+def _scan_stage(cfg, body, x, stacked_params, stacked_cache, decoding):
+    """Scan a homogeneous stage; remat the body during training.
+    ``scan_layers=False`` unrolls instead (small-L models / the
+    flops-model validation path — XLA cost_analysis counts a scan body
+    once, an unrolled graph in full)."""
+    fn = body
+    if cfg.remat and not decoding:
+        fn = jax.checkpoint(fn, prevent_cse=False)
+
+    def step(carry, layer):
+        p, c = layer
+        y, nc = fn(carry, p, c)
+        return y, nc
+
+    n = jax.tree_util.tree_leaves(stacked_params)[0].shape[0]
+    if not cfg.scan_layers:
+        new_caches = []
+        for i in range(n):
+            p_i = jax.tree_util.tree_map(lambda a: a[i], stacked_params)
+            c_i = (jax.tree_util.tree_map(lambda a: a[i], stacked_cache)
+                   if stacked_cache is not None else None)
+            x, nc = fn(x, p_i, c_i)
+            if stacked_cache is not None:
+                new_caches.append(nc)
+        if stacked_cache is None:
+            return x, None
+        stacked = jax.tree_util.tree_map(
+            lambda *ls: jnp.stack(ls), *new_caches)
+        return x, stacked
+
+    if stacked_cache is None:
+        dummy = jnp.zeros((n,), jnp.int32)
+        x, _ = jax.lax.scan(
+            lambda carry, pl: (fn(carry, pl[0], None)[0], pl[1]),
+            x, (stacked_params, dummy))
+        return x, None
+    x, new_caches = jax.lax.scan(step, x, (stacked_params, stacked_cache))
+    return x, new_caches
+
+
+# -------------------------------------------------------------- forward ---
+
+def forward(cfg: ModelConfig, params, tokens, *,
+            caches=None, prefix_embeds=None, positions=None):
+    """Backbone forward.  tokens: (B, S) int32 → hidden (B, S, D).
+
+    `caches=None` → training/prefill-without-cache; otherwise a list from
+    ``init_caches`` (decode or cached prefill).  ``prefix_embeds``
+    (B, P, D) are VLM/audio stub embeddings occupying the first P
+    positions (tokens then fill the remaining S−P).
+    """
+    dt = jnp.dtype(cfg.compute_dtype)
+    from .layers import embed
+    x = embed(params["embed"], tokens, dt)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(dt), x], axis=1)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    if cfg.pos == "learned":
+        base = (caches_length(caches) if caches is not None else 0)
+        pos = base + jnp.arange(x.shape[1])
+        table = params["pos_embed"]["table"]
+        x = x + jnp.take(table, jnp.minimum(pos, table.shape[0] - 1),
+                         axis=0).astype(dt)[None]
+    x = constrain(x, "batch", "seq", "act_embed")
+
+    decoding = caches is not None
+    new_caches = [] if decoding else None
+    plan = stage_plan(cfg)
+    for i, (kind, n) in enumerate(plan):
+        sp = params["stages"][i]
+        cache_i = caches[i] if decoding else None
+        if kind in ("dense", "moe"):
+            ffn = "moe" if kind == "moe" else "mlp"
+            body = functools.partial(_block_body_attn, cfg, ffn, positions)
+            x, nc = _scan_stage(cfg, body, x, sp, cache_i, decoding)
+        elif kind == "mamba":
+            body = _block_body_mamba(cfg)
+            x, nc = _scan_stage(cfg, body, x, sp, cache_i, decoding)
+        else:  # hybrid period
+            x, nc = _apply_period_stage(cfg, params, sp, x, cache_i,
+                                        positions, decoding)
+        if decoding:
+            new_caches.append(nc)
+    x = norm(cfg, params["final_norm"], x)
+    return (x, new_caches) if decoding else x
+
+
+def _block_body_attn(cfg, ffn, positions, x, p, c):
+    return _apply_attn_block(cfg, p, x, c, ffn, positions)
+
+
+def _block_body_mamba(cfg):
+    def body(x, p, c):
+        return _apply_mamba_block(cfg, p, x, c)
+    return body
+
+
+def _apply_period_stage(cfg, params, sp, x, cache, positions, decoding):
+    """hybrid: scan over periods; body = inner scan of mamba + shared attn."""
+    shared = params["shared_attn"]
+
+    def period_body(x, p_mambas, c):
+        c_m = c["mambas"] if c is not None else None
+        x, nc_m = _scan_stage(cfg, _block_body_mamba(cfg), x, p_mambas,
+                              c_m, decoding)
+        c_a = c["attn"] if c is not None else None
+        x, nc_a = _apply_attn_block(cfg, shared, x, c_a, "mlp", positions)
+        if decoding:
+            return x, {"mambas": nc_m, "attn": nc_a}
+        return x, None
+
+    if cfg.remat and not decoding:
+        period_body = jax.checkpoint(period_body, prevent_cse=False,
+                                     static_argnums=())
+
+    if decoding:
+        # scan over periods; scan un/re-stacks the leading n_periods axis
+        def step(carry, layer):
+            p, c = layer
+            y, nc = period_body(carry, p["mambas"], c)
+            return y, nc
+        x, ncs = jax.lax.scan(step, x, (sp, cache))
+        return x, ncs
+    n = jax.tree_util.tree_leaves(sp)[0].shape[0]
+    x, _ = jax.lax.scan(
+        lambda carry, p: (period_body(carry, p["mambas"], None)[0], 0),
+        x, sp)
+    return x, None
+
+
+def caches_length(caches) -> jax.Array:
+    """Current fill position from the first KV cache found (else 0)."""
+    for c in jax.tree_util.tree_leaves(
+            caches, is_leaf=lambda x: isinstance(x, attn_lib.KVCache)):
+        if isinstance(c, attn_lib.KVCache):
+            ln = c.length
+            return ln[0] if ln.ndim else ln
+    return jnp.int32(0)
+
+
+# ---------------------------------------------------------------- heads ---
+
+def logits_fn(cfg, params, hidden):
+    if cfg.tie_embeddings:
+        table = params["embed"]["table"]
+        logits = jnp.einsum("bsd,vd->bsv", hidden,
+                            table.astype(hidden.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", hidden,
+                            params["lm_head"]["w"].astype(hidden.dtype))
+    if cfg.vocab_padded != cfg.vocab:
+        # mask sharding-pad columns so softmax/CE never route mass there
+        pad = cfg.vocab_padded - cfg.vocab
+        neg = jnp.full(logits.shape[:-1] + (pad,), -1e30, logits.dtype)
+        logits = jnp.concatenate([logits[..., :cfg.vocab], neg], axis=-1)
+    return logits
+
+
+def lm_loss(cfg: ModelConfig, params, hidden, labels):
+    """Chunked-over-sequence vocab cross-entropy (keeps the (B,S,V) logits
+    tensor from ever materializing — memory-roofline win at 256k vocab)."""
+    b, s, d = hidden.shape
+    chunk = min(cfg.loss_chunk, s)
+    while s % chunk:
+        chunk -= 1
+    nch = s // chunk
+    hc = hidden.reshape(b, nch, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nch, chunk).transpose(1, 0, 2)
+
+    def step(tot, inp):
+        h, y = inp
+        logits = logits_fn(cfg, params, h).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(step, jnp.float32(0.0), (hc, lc))
+    return total / (b * s)

@@ -1,0 +1,6 @@
+from .optimizers import (Optimizer, adamw, adafactor, sgd,
+                         global_norm, clip_by_global_norm)
+from .schedule import cosine_schedule, linear_warmup
+
+__all__ = ["Optimizer", "adamw", "adafactor", "sgd", "global_norm",
+           "clip_by_global_norm", "cosine_schedule", "linear_warmup"]

@@ -1,0 +1,16 @@
+"""LR schedules as pure fns of the step counter."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup: int, peak: float):
+    return peak * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+
+
+def cosine_schedule(step, *, peak: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    warm = linear_warmup(step, warmup, peak)
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, peak * cos)

@@ -1,0 +1,3 @@
+from .decode import make_serve_step, make_prefill, greedy_generate
+
+__all__ = ["make_serve_step", "make_prefill", "greedy_generate"]

@@ -1,0 +1,69 @@
+"""Serving path: batched prefill + single-token decode with KV/SSM caches.
+
+``serve_step`` is what decode_32k / long_500k dry-run cells lower: one new
+token per sequence against a seq_len-deep cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as tf
+
+
+def make_prefill(cfg: ModelConfig, max_len: int):
+    def prefill(params, batch: Dict[str, jax.Array]):
+        b = batch["tokens"].shape[0]
+        dt = jnp.dtype(cfg.compute_dtype)
+        if cfg.family == "encdec":
+            enc = encdec_lib.encode(cfg, params, batch["frames"])
+            caches = encdec_lib.init_dec_caches(cfg, params, enc, b,
+                                                max_len, dt)
+            hidden, caches = encdec_lib.decode(cfg, params, batch["tokens"],
+                                               None, caches=caches)
+        else:
+            caches = tf.init_caches(cfg, b, max_len, dt)
+            hidden, caches = tf.forward(
+                cfg, params, batch["tokens"], caches=caches,
+                prefix_embeds=batch.get("patch_embeds"))
+        logits = _logits(cfg, params, hidden[:, -1:])
+        return logits, caches
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig):
+    """serve_step(params, caches, tokens (B,1)) → (next (B,1), caches)."""
+    def serve_step(params, caches, tokens):
+        if cfg.family == "encdec":
+            hidden, caches = encdec_lib.decode(cfg, params, tokens, None,
+                                               caches=caches)
+        else:
+            hidden, caches = tf.forward(cfg, params, tokens, caches=caches)
+        logits = _logits(cfg, params, hidden)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, caches
+    return serve_step
+
+
+def _logits(cfg, params, hidden):
+    if cfg.family == "encdec":
+        return encdec_lib.logits_fn(cfg, params, hidden)
+    return tf.logits_fn(cfg, params, hidden)
+
+
+def greedy_generate(cfg: ModelConfig, params, batch, *, max_new: int,
+                    max_len: int):
+    """Host loop: prefill then greedy decode (examples / tests)."""
+    prefill = jax.jit(make_prefill(cfg, max_len))
+    step = jax.jit(make_serve_step(cfg))
+    logits, caches = prefill(params, batch)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    for _ in range(max_new - 1):
+        tok, caches = step(params, caches, tok)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,5 @@
+from .rules import (LOGICAL_RULES, constrain, logical_to_spec, set_mesh,
+                    get_mesh, mesh_context, data_axes, abstract_like)
+
+__all__ = ["LOGICAL_RULES", "constrain", "logical_to_spec", "set_mesh",
+           "get_mesh", "mesh_context", "data_axes", "abstract_like"]

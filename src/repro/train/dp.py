@@ -1,0 +1,110 @@
+"""Explicit data-parallel gradient synchronization with compression.
+
+pjit's implicit gradient reduction always runs at the gradient dtype.
+For bandwidth-starved interconnects (cross-pod DCN, or ICI at very large
+data-parallel degree), production systems compress the gradient
+all-reduce.  This module makes the reduction EXPLICIT via `shard_map`
+so the wire dtype is ours to choose:
+
+  * grads are averaged over the data axes with a `psum` in
+    ``wire_dtype`` (bf16 halves bytes vs f32; fp8 quarters them on
+    hardware that supports it),
+  * **error feedback** keeps the optimizer exact-on-average: the
+    per-device quantization residual (g - decompress(compress(g))) is
+    carried and added to the next step's gradient, so compression noise
+    is a zero-mean perturbation rather than a bias (Seide et al. '14,
+    Karimireddy et al. '19).
+
+Used by `make_dp_train_step`; each device computes grads on its own
+microbatch, the compressed psum replaces pjit's implicit reduction.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.optim import Optimizer, clip_by_global_norm
+from .step import TrainState, model_loss
+
+
+class DPState(NamedTuple):
+    train: TrainState
+    error: Any          # error-feedback residual pytree (f32)
+
+
+def compress(g, wire_dtype):
+    return g.astype(wire_dtype)
+
+
+def make_dp_train_step(cfg, optimizer: Optimizer, lr_fn, mesh: Mesh, *,
+                       data_axes: Sequence[str] = ("data",),
+                       wire_dtype=jnp.bfloat16, grad_clip: float = 1.0):
+    """Replicated-params DP step with compressed gradient psum + EF.
+
+    Batch is sharded over ``data_axes``; params/optimizer state are
+    replicated (pure DP — the compression story composes with FSDP by
+    applying the same wire-dtype trick to reduce-scatter, left as the
+    documented extension).
+    """
+    data_axes = tuple(data_axes)
+
+    def local_step(state: DPState, batch):
+        from repro.sharding.rules import mesh_context
+        ts = state.train
+        # inside shard_map all mesh axes are manual: model-code sharding
+        # constraints must be no-ops (per-rank compute is fully local)
+        with mesh_context(None):
+            loss, grads = jax.value_and_grad(
+                lambda p: model_loss(cfg, p, batch))(ts.params)
+
+        def sync(g, e):
+            g = g.astype(jnp.float32) + e           # error feedback in
+            q = compress(g, wire_dtype)
+            g_hat = jax.lax.pmean(q.astype(jnp.float32), data_axes)
+            new_e = g - q.astype(jnp.float32)       # residual carried
+            return g_hat, new_e
+
+        pairs = jax.tree_util.tree_map(sync, grads, state.error)
+        g_sync = jax.tree_util.tree_map(lambda pr: pr[0], pairs,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree_util.tree_map(lambda pr: pr[1], pairs,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        loss = jax.lax.pmean(loss, data_axes)
+
+        g_sync, gnorm = clip_by_global_norm(g_sync, grad_clip)
+        lr = lr_fn(ts.step)
+        new_params, new_opt = optimizer.update(g_sync, ts.opt_state,
+                                               ts.params, lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
+                   "step": ts.step}
+        return DPState(TrainState(new_params, new_opt, ts.step + 1),
+                       new_err), metrics
+
+    bspec = P(data_axes)
+
+    def step(state: DPState, batch):
+        state_specs = jax.tree_util.tree_map(lambda _: P(), state)
+        batch_specs = jax.tree_util.tree_map(lambda _: bspec, batch)
+        out = shard_map(
+            local_step, mesh=mesh,
+            in_specs=(state_specs, batch_specs),
+            out_specs=(state_specs,
+                       jax.tree_util.tree_map(lambda _: P(),
+                                              {"loss": 0, "grad_norm": 0,
+                                               "lr": 0, "step": 0})),
+            check_vma=False,
+        )(state, batch)
+        return out
+
+    return step
+
+
+def init_dp_state(params, optimizer: Optimizer) -> DPState:
+    from .step import init_train_state
+    err = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return DPState(init_train_state(params, optimizer), err)

@@ -1,0 +1,85 @@
+"""Training step: loss → grads → clip → optimizer, with optional
+microbatch gradient accumulation (lax.scan, constant memory).
+
+Everything is shape-polymorphic over the config; the same function is
+jit-lowered for smoke tests (1 CPU device) and the 512-chip dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as tf
+from repro.optim import Optimizer, clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def init_train_state(params, optimizer: Optimizer) -> TrainState:
+    return TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
+
+
+def model_loss(cfg: ModelConfig, params, batch: Dict[str, jax.Array]):
+    """Cross-entropy for any family.  batch keys:
+    tokens/labels (all), frames (encdec), patch_embeds (vlm)."""
+    if cfg.family == "encdec":
+        enc = encdec_lib.encode(cfg, params, batch["frames"])
+        hidden = encdec_lib.decode(cfg, params, batch["tokens"], enc)
+        return tf.lm_loss(cfg, params, hidden, batch["labels"])
+    prefix = batch.get("patch_embeds")
+    hidden = tf.forward(cfg, params, batch["tokens"], prefix_embeds=prefix)
+    if prefix is not None:
+        hidden = hidden[:, prefix.shape[1]:]
+    return tf.lm_loss(cfg, params, hidden, batch["labels"])
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, lr_fn,
+                    *, grad_clip: float = 1.0, microbatches: int = 1):
+    """Returns train_step(state, batch) → (state, metrics)."""
+
+    def loss_and_grads(params, batch):
+        return jax.value_and_grad(
+            lambda p: model_loss(cfg, p, batch))(params)
+
+    def step_fn(state: TrainState, batch):
+        if microbatches > 1:
+            def slice_mb(x):
+                b = x.shape[0]
+                return x.reshape((microbatches, b // microbatches)
+                                 + x.shape[1:])
+            mbatch = jax.tree_util.tree_map(slice_mb, batch)
+
+            def accum(carry, mb):
+                tot_l, tot_g = carry
+                l, g = loss_and_grads(state.params, mb)
+                tot_g = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(jnp.float32), tot_g, g)
+                return (tot_l + l, tot_g), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), _ = jax.lax.scan(
+                accum, (jnp.float32(0), zeros), mbatch)
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+        else:
+            loss, grads = loss_and_grads(state.params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        lr = lr_fn(state.step)
+        new_params, new_opt = optimizer.update(grads, state.opt_state,
+                                               state.params, lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
+                   "step": state.step}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return step_fn

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: device count is deliberately NOT forced here — smoke tests and
+# benches must see the host's real (1-device) topology.  Multi-device
+# tests spawn subprocesses that set XLA_FLAGS before importing jax.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

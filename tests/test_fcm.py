@@ -1,0 +1,85 @@
+"""Core FCM/WFCM/WFCMPB behaviour (paper Alg. 1/2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fcm, wfcmpb, soft_assign, hard_assign
+from repro.core.fcm import fcm_sweep, membership_terms
+from repro.data import make_blobs
+
+
+def _blobs(n=1200, d=4, c=3, seed=0):
+    x, y = make_blobs(n, d, c, seed=seed)
+    return jnp.asarray(x), y
+
+
+def test_fcm_recovers_blob_centers():
+    x, y = _blobs()
+    v0 = x[:3]
+    res = fcm(x, v0, m=2.0, eps=1e-10, max_iter=500)
+    assign = np.asarray(hard_assign(x, res.centers))
+    # cluster/label agreement via majority mapping
+    acc = 0
+    for c in range(3):
+        lab = np.asarray(y)[assign == c]
+        if len(lab):
+            acc += np.bincount(lab).max()
+    assert acc / len(y) > 0.98
+    assert int(res.n_iter) < 500
+
+
+def test_fcm_objective_nonincreasing():
+    x, _ = _blobs(seed=1)
+    v = x[:3]
+    w = jnp.ones(x.shape[0])
+    prev = np.inf
+    for _ in range(20):
+        v, _, q = fcm_sweep(x, w, v, 2.0)
+        assert float(q) <= prev + 1e-3
+        prev = float(q)
+
+
+def test_membership_rows_sum_to_one():
+    x, _ = _blobs(n=100)
+    u = soft_assign(x, x[:5], m=2.0)
+    np.testing.assert_allclose(np.asarray(u.sum(-1)), 1.0, atol=1e-5)
+
+
+def test_weight_equals_duplication():
+    """A record with weight 2 must act exactly like two copies (WFCM)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(50, 3)).astype(np.float32))
+    xd = jnp.concatenate([x, x[:10]], axis=0)
+    w = jnp.ones(50).at[:10].set(2.0)
+    v0 = x[:4]
+    r_dup = fcm(xd, v0, m=2.0, eps=1e-12, max_iter=200)
+    r_w = fcm(x, v0, m=2.0, eps=1e-12, max_iter=200, point_weights=w)
+    np.testing.assert_allclose(np.asarray(r_dup.centers),
+                               np.asarray(r_w.centers), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_wfcmpb_matches_fcm_quality():
+    x, _ = _blobs(n=2000, seed=2)
+    v0 = x[:3]
+    r_full = fcm(x, v0, m=2.0, eps=1e-9, max_iter=500)
+    r_pb = wfcmpb(x, v0, m=2.0, eps=1e-9, max_iter=500, block_size=256)
+    # same centers up to permutation/tolerance
+    a = np.sort(np.asarray(r_full.centers), axis=0)
+    b = np.sort(np.asarray(r_pb.centers), axis=0)
+    np.testing.assert_allclose(a, b, atol=0.3)
+
+
+def test_fcm_max_iter_straggler_cap():
+    x, _ = _blobs()
+    res = fcm(x, x[:3], m=2.0, eps=0.0, max_iter=7)
+    assert int(res.n_iter) == 7
+
+
+def test_m_exponent_variants():
+    x, _ = _blobs(n=300)
+    for m in (1.2, 2.0, 3.0):
+        res = fcm(x, x[:3], m=m, eps=1e-8, max_iter=200)
+        assert np.isfinite(np.asarray(res.centers)).all()
+        assert float(res.objective) >= 0

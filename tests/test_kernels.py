@@ -1,0 +1,81 @@
+"""Pallas kernel vs pure-jnp oracle: shape/dtype sweep (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fcm_update import fcm_sweep_pallas
+from repro.kernels.ops import fcm_sweep_kernel
+from repro.kernels.ref import fcm_sweep_ref
+
+SHAPES = [
+    (64, 2, 2), (100, 130, 7), (257, 4, 3), (1000, 18, 10),
+    (2048, 28, 50), (31, 41, 23), (512, 8, 129),
+]
+
+
+@pytest.mark.parametrize("n,d,c", SHAPES)
+def test_kernel_matches_ref_shapes(n, d, c):
+    rng = np.random.default_rng(n + d + c)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.1, 3.0, size=(n,)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(c, d)).astype(np.float32))
+    got = fcm_sweep_kernel(x, w, v, 2.0)
+    want = fcm_sweep_ref(x, w, v, 2.0)
+    for g, e in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(e),
+                                   rtol=3e-4, atol=3e-5)
+
+
+@pytest.mark.parametrize("m", [1.2, 2.0, 3.0])
+def test_kernel_matches_ref_m(m):
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(500, 12)).astype(np.float32))
+    w = jnp.ones((500,), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(6, 12)).astype(np.float32))
+    got = fcm_sweep_kernel(x, w, v, m)
+    want = fcm_sweep_ref(x, w, v, m)
+    for g, e in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(e),
+                                   rtol=5e-4, atol=5e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtypes(dtype):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(256, 16)), dtype)
+    w = jnp.ones((256,), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(4, 16)), dtype)
+    got = fcm_sweep_kernel(x, w, v, 2.0)
+    want = fcm_sweep_ref(x, w, v, 2.0)
+    tol = 3e-4 if dtype == jnp.float32 else 3e-2
+    for g, e in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(e, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("tile_n", [128, 512, 1024])
+def test_kernel_tile_invariance(tile_n):
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(1111, 9)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.5, 1.5, size=(1111,)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(5, 9)).astype(np.float32))
+    got = fcm_sweep_pallas(x, w, v, 2.0, tile_n=tile_n, interpret=True)
+    want = fcm_sweep_ref(x, w, v, 2.0)
+    for g, e in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(e),
+                                   rtol=3e-4, atol=3e-5)
+
+
+def test_kernel_inside_full_fcm_loop():
+    from repro.core import fcm
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(600, 8)).astype(np.float32))
+    r_ref = fcm(x, x[:5], m=2.0, eps=1e-8, max_iter=100)
+    r_k = fcm(x, x[:5], m=2.0, eps=1e-8, max_iter=100,
+              sweep_fn=fcm_sweep_kernel)
+    assert int(r_ref.n_iter) == int(r_k.n_iter)
+    np.testing.assert_allclose(np.asarray(r_ref.centers),
+                               np.asarray(r_k.centers), rtol=2e-3,
+                               atol=2e-4)

@@ -1,0 +1,132 @@
+"""Model-stack correctness: decode == train forward for every family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as tf
+from repro.models.params import tree_init
+
+FAMS = {
+    "dense": dict(),
+    "moe": dict(n_experts=8, top_k=2, capacity_factor=8.0),
+    "ssm": dict(d_ff=0, ssm_state=16, ssm_head_dim=16, ssm_chunk=4),
+    "hybrid": dict(ssm_state=16, ssm_head_dim=16, ssm_chunk=4,
+                   attn_period=2, n_layers=7),
+}
+
+
+def _cfg(fam, **kw):
+    base = dict(name="tiny", family=fam, n_layers=3, d_model=64, n_heads=4,
+                n_kv_heads=2, d_ff=128, vocab=256, compute_dtype="float32",
+                param_dtype="float32", attn_chunk=0, qkv_bias=(fam == "dense"))
+    base.update(FAMS[fam])
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("fam", sorted(FAMS))
+def test_decode_matches_forward(fam):
+    cfg = _cfg(fam)
+    params = tree_init(jax.random.PRNGKey(0), tf.decl(cfg))
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(0, 256, (2, 16)), jnp.int32)
+    h = tf.forward(cfg, params, tokens)
+    caches = tf.init_caches(cfg, 2, 32, jnp.float32)
+    h_pre, caches = tf.forward(cfg, params, tokens[:, :8], caches=caches)
+    outs = [h_pre[:, -1]]
+    for t in range(8, 16):
+        h_t, caches = tf.forward(cfg, params, tokens[:, t:t + 1],
+                                 caches=caches)
+        outs.append(h_t[:, 0])
+    h_dec = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(h[:, 7:16]), np.asarray(h_dec),
+                               rtol=5e-3, atol=5e-4)
+
+
+def test_chunked_attention_matches_full():
+    cfg_full = _cfg("dense", attn_chunk=0)
+    cfg_chunk = _cfg("dense", attn_chunk=8)
+    params = tree_init(jax.random.PRNGKey(1), tf.decl(cfg_full))
+    tokens = jnp.asarray(
+        np.random.default_rng(1).integers(0, 256, (2, 32)), jnp.int32)
+    h_full = tf.forward(cfg_full, params, tokens)
+    h_chunk = tf.forward(cfg_chunk, params, tokens)
+    np.testing.assert_allclose(np.asarray(h_full), np.asarray(h_chunk),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_chunked_loss_matches_full():
+    cfg = _cfg("dense")
+    params = tree_init(jax.random.PRNGKey(2), tf.decl(cfg))
+    tokens = jnp.asarray(
+        np.random.default_rng(2).integers(0, 256, (2, 32)), jnp.int32)
+    h = tf.forward(cfg, params, tokens)
+    labels = jnp.roll(tokens, -1, 1)
+    import dataclasses
+    l_full = tf.lm_loss(dataclasses.replace(cfg, loss_chunk=32), params, h,
+                        labels)
+    l_chunk = tf.lm_loss(dataclasses.replace(cfg, loss_chunk=8), params, h,
+                         labels)
+    np.testing.assert_allclose(float(l_full), float(l_chunk), rtol=1e-5)
+
+
+def test_gqa_repetition_consistency():
+    """n_kv_heads=n_heads (MHA) equals GQA with repeated KV weights."""
+    cfg_g = _cfg("dense", n_kv_heads=2, qkv_bias=False)
+    cfg_m = _cfg("dense", n_kv_heads=4, qkv_bias=False)
+    pg = tree_init(jax.random.PRNGKey(3), tf.decl(cfg_g))
+    pm = jax.tree_util.tree_map(lambda a: a, tree_init(
+        jax.random.PRNGKey(3), tf.decl(cfg_m)))
+
+    def widen(wk):
+        # (d, 2*hd) -> (d, 4*hd) repeating each kv head for 2 q-heads
+        d, _ = wk.shape
+        hd = 16
+        k = wk.reshape(d, 2, hd)
+        return jnp.repeat(k, 2, axis=1).reshape(d, 4 * hd)
+
+    stages = pg["stages"][0]
+    pm["stages"][0]["attn"]["wk"] = jax.vmap(widen)(stages["attn"]["wk"])
+    pm["stages"][0]["attn"]["wv"] = jax.vmap(widen)(stages["attn"]["wv"])
+    for k in ("wq", "wo"):
+        pm["stages"][0]["attn"][k] = stages["attn"][k]
+    for k in ("ln1", "ln2", "mlp"):
+        pm["stages"][0][k] = stages[k]
+    for k in ("embed", "final_norm", "lm_head"):
+        pm[k] = pg[k]
+    tokens = jnp.asarray(
+        np.random.default_rng(4).integers(0, 256, (2, 12)), jnp.int32)
+    hg = tf.forward(cfg_g, pg, tokens)
+    hm = tf.forward(cfg_m, pm, tokens)
+    np.testing.assert_allclose(np.asarray(hg), np.asarray(hm), rtol=2e-3,
+                               atol=2e-4)
+
+
+def test_encdec_decode_matches_forward():
+    cfg = ModelConfig(name="t", family="encdec", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=128, vocab=256,
+                      act="gelu", norm="layernorm", pos="learned",
+                      n_enc_layers=2, n_frames=12, tie_embeddings=True,
+                      compute_dtype="float32", param_dtype="float32",
+                      attn_chunk=0, max_target_positions=64)
+    params = tree_init(jax.random.PRNGKey(5), encdec_lib.decl(cfg))
+    rng = np.random.default_rng(5)
+    frames = jnp.asarray(rng.normal(size=(2, 12, 64)), jnp.float32)
+    tokens = jnp.asarray(rng.integers(0, 256, (2, 16)), jnp.int32)
+    enc = encdec_lib.encode(cfg, params, frames)
+    h = encdec_lib.decode(cfg, params, tokens, enc)
+    caches = encdec_lib.init_dec_caches(cfg, params, enc, 2, 32,
+                                        jnp.float32)
+    h_pre, caches = encdec_lib.decode(cfg, params, tokens[:, :8], None,
+                                      caches=caches)
+    outs = [h_pre[:, -1]]
+    for t in range(8, 16):
+        h_t, caches = encdec_lib.decode(cfg, params, tokens[:, t:t + 1],
+                                        None, caches=caches)
+        outs.append(h_t[:, 0])
+    np.testing.assert_allclose(np.asarray(h[:, 7:16]),
+                               np.asarray(jnp.stack(outs, 1)),
+                               rtol=5e-3, atol=5e-4)

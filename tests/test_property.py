@@ -1,0 +1,89 @@
+"""Hypothesis property tests on system invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fcm, soft_assign
+from repro.core.fcm import fcm_sweep
+from repro.core.sampling import parker_hall_sample_size, thompson_sample_size
+from repro.kernels.ops import fcm_sweep_kernel
+from repro.kernels.ref import fcm_sweep_ref
+
+_f32 = st.floats(-50, 50, allow_nan=False, width=32)
+
+
+def _data(draw, nmin=8, nmax=64, dmin=1, dmax=8):
+    n = draw(st.integers(nmin, nmax))
+    d = draw(st.integers(dmin, dmax))
+    rows = draw(st.lists(st.lists(_f32, min_size=d, max_size=d),
+                         min_size=n, max_size=n))
+    return np.array(rows, np.float32)
+
+
+@st.composite
+def dataset(draw):
+    x = _data(draw)
+    c = draw(st.integers(2, min(5, x.shape[0])))
+    return x, c
+
+
+@given(dataset())
+@settings(max_examples=25, deadline=None)
+def test_memberships_sum_to_one_and_bounded(xc):
+    x, c = xc
+    x = jnp.asarray(x) + jnp.linspace(0, 1e-3, x.shape[0])[:, None]
+    u = np.asarray(soft_assign(x, x[:c], m=2.0))
+    assert np.all(u >= -1e-6) and np.all(u <= 1 + 1e-6)
+    np.testing.assert_allclose(u.sum(-1), 1.0, atol=1e-4)
+
+
+@given(dataset())
+@settings(max_examples=25, deadline=None)
+def test_centers_stay_in_bounding_box(xc):
+    x, c = xc
+    xj = jnp.asarray(x)
+    res = fcm(xj, xj[:c], m=2.0, eps=1e-7, max_iter=50)
+    v = np.asarray(res.centers)
+    lo, hi = x.min(0) - 1e-3, x.max(0) + 1e-3
+    assert np.all(v >= lo) and np.all(v <= hi)
+
+
+@given(dataset())
+@settings(max_examples=20, deadline=None)
+def test_sweep_permutation_invariant(xc):
+    x, c = xc
+    w = np.ones(x.shape[0], np.float32)
+    v = x[:c]
+    perm = np.random.default_rng(0).permutation(x.shape[0])
+    a = fcm_sweep(jnp.asarray(x), jnp.asarray(w), jnp.asarray(v), 2.0)
+    b = fcm_sweep(jnp.asarray(x[perm]), jnp.asarray(w[perm]),
+                  jnp.asarray(v), 2.0)
+    for ga, gb in zip(a, b):
+        np.testing.assert_allclose(np.asarray(ga), np.asarray(gb),
+                                   rtol=2e-3, atol=2e-3)
+
+
+@given(dataset())
+@settings(max_examples=20, deadline=None)
+def test_kernel_ref_agree_property(xc):
+    x, c = xc
+    w = np.abs(np.random.default_rng(1).normal(
+        1.0, 0.2, x.shape[0])).astype(np.float32) + 0.1
+    got = fcm_sweep_kernel(jnp.asarray(x), jnp.asarray(w),
+                           jnp.asarray(x[:c]), 2.0)
+    want = fcm_sweep_ref(jnp.asarray(x), jnp.asarray(w),
+                         jnp.asarray(x[:c]), 2.0)
+    for g, e in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(e),
+                                   rtol=1e-3, atol=1e-2)
+
+
+@given(st.integers(2, 64), st.floats(0.01, 0.5),
+       st.sampled_from([0.05, 0.1, 0.01]))
+@settings(max_examples=50, deadline=None)
+def test_sample_sizes_positive_monotone(c, r, alpha):
+    lam = parker_hall_sample_size(c, r, alpha)
+    assert lam >= 1
+    assert parker_hall_sample_size(c + 1, r, alpha) >= lam
+    assert parker_hall_sample_size(c, r / 2, alpha) >= lam
+    assert thompson_sample_size(c, r, alpha) >= 1
