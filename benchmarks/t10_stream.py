@@ -1,0 +1,76 @@
+"""Streaming ingest benchmark (PR 2, `repro.stream`).
+
+Measures the two latencies that bound a streaming deployment and writes
+``benchmarks/BENCH_stream.json`` (rows with the `common.py` schema:
+name / us_per_call / derived):
+
+  * **sustained ingest** — records/sec through the full state machine
+    (socket-sim source → combiner → window push → hierarchical WFCM
+    merge → drift stats), steady-state after the compile warm-up;
+  * **window merge latency** — the hierarchical WFCM reduce over the
+    (W, C, d) ring buffer alone (the per-batch serving-freshness cost);
+  * **accumulate sweep** — the raw Pallas streaming-accumulate entry
+    point (`fcm_accumulate_kernel`) chunk-merged over the same records,
+    the floor any single-pass mode can hit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.data import iterator_source, make_moving_blobs, socket_sim_source
+from repro.kernels.ops import accumulate_chunks
+from repro.stream import StreamConfig, StreamingBigFCM
+
+from .common import emit, timeit
+
+CHUNK, N_CHUNKS, D, C = 8192, 8, 16, 8
+ROWS_JSON = []
+
+
+def _emit(name: str, us_per_call: float, derived: str = ""):
+    emit(name, us_per_call, derived)
+    ROWS_JSON.append({"name": name, "us_per_call": round(us_per_call, 1),
+                      "derived": derived})
+
+
+def run() -> None:
+    chunks = [x for x, _ in make_moving_blobs(
+        N_CHUNKS + 1, CHUNK, D, C, drift_at=N_CHUNKS + 1, seed=0)]
+    cfg = StreamConfig(n_clusters=C, window=4, max_iter=150,
+                       driver_sample=512, seed=0)
+    model = StreamingBigFCM(cfg)
+    model.ingest(chunks[0])            # compile warm-up (driver + ingest)
+
+    t0 = time.perf_counter()
+    for x in socket_sim_source(iterator_source(chunks[1:])):
+        model.ingest(x)
+    dt = time.perf_counter() - t0
+    n_rec = N_CHUNKS * CHUNK
+    _emit("stream/ingest", dt / N_CHUNKS * 1e6,
+          f"{n_rec / dt:.0f} records/sec")
+
+    st = model.state
+    t_merge = timeit(model._jmerge, st.win_centers, st.win_weights)
+    _emit("stream/window_merge", t_merge * 1e6,
+          f"W={cfg.window} C={C} hierarchical")
+
+    ws = [np.ones((CHUNK,), np.float32)] * N_CHUNKS
+    t_acc = timeit(lambda: accumulate_chunks(chunks[1:], ws,
+                                             st.centers, cfg.m))
+    _emit("stream/accumulate_sweep", t_acc / N_CHUNKS * 1e6,
+          f"{n_rec / t_acc:.0f} records/sec single-pass")
+
+    out = os.path.join(os.path.dirname(__file__), "BENCH_stream.json")
+    with open(out, "w") as f:
+        json.dump({"bench": "t10_stream",
+                   "chunk": CHUNK, "n_chunks": N_CHUNKS, "d": D, "c": C,
+                   "rows": ROWS_JSON}, f, indent=2)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    run()

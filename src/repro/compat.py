@@ -1,0 +1,63 @@
+"""Compatibility shims for the pinned jax (0.4.37).
+
+The repo is written against the current jax surface; everything that has
+moved or been renamed since 0.4.37 is routed through here so call sites
+stay modern.  Each shim prefers the new location and falls back:
+
+  * ``shard_map`` — new jax exports it at top level with a ``check_vma``
+    kwarg; 0.4.37 has ``jax.experimental.shard_map.shard_map`` with the
+    old ``check_rep`` name for the same flag.
+  * ``AbstractMesh`` — 0.4.37 takes a ``shape_tuple`` of (name, size)
+    pairs; newer jax takes (axis_sizes, axis_names).
+
+New jax API drift gets another shim here — never import moved names from
+``jax`` directly in library code.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+
+def _resolve_shard_map():
+    try:                                    # jax >= 0.6: top-level export
+        from jax import shard_map as sm
+        return sm, "check_vma"
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as sm
+        return sm, "check_rep"
+
+
+_SHARD_MAP, _CHECK_KW = _resolve_shard_map()
+
+
+def shard_map(f=None, **kwargs: Any):
+    """`jax.shard_map` with the modern signature on any supported jax.
+
+    Accepts either ``check_vma`` (new name) or ``check_rep`` (old name)
+    and forwards whichever the installed jax understands.  Usable both as
+    ``shard_map(f, mesh=..., ...)`` and partially as
+    ``shard_map(mesh=..., ...)(f)``.
+    """
+    if f is None:
+        return functools.partial(shard_map, **kwargs)
+    check = kwargs.pop("check_vma", kwargs.pop("check_rep", None))
+    if check is not None:
+        kwargs[_CHECK_KW] = check
+    return _SHARD_MAP(f, **kwargs)
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """Construct ``jax.sharding.AbstractMesh`` across signature changes.
+
+    0.4.37 accepts the new-style ``(sizes, names)`` call without error
+    and only blows up on first attribute access, so probe a property to
+    validate eagerly rather than trusting construction.
+    """
+    from jax.sharding import AbstractMesh
+    try:                                    # new: (axis_sizes, axis_names)
+        m = AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+        m.axis_names                        # force shape_tuple validation
+        return m
+    except TypeError:                       # 0.4.37: shape_tuple pairs
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))

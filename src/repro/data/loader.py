@@ -24,8 +24,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 def parse_records(lines: Sequence[str], *, sep: str = ",") -> np.ndarray:
     """Mapper lines 7–8: strip whitespace/separators → float records."""
-    rows = [np.fromstring(ln.replace(" ", ""), sep=sep, dtype=np.float32)
-            for ln in lines if ln.strip()]
+    rows = []
+    for ln in lines:
+        if not ln.strip():
+            continue
+        toks = [t for t in ln.replace(" ", "").split(sep) if t]
+        rows.append(np.fromiter(map(float, toks), np.float32, count=len(toks)))
     return np.stack(rows)
 
 

@@ -1,0 +1,135 @@
+"""Stream sources — the ingestion side of `repro.stream`.
+
+BigFCM's mapper reads HDFS splits; the streaming subsystem reads
+*unbounded* chunk sequences.  A source is simply an iterator of
+``(n_i, d)`` float arrays; this module provides the three production
+shapes of that iterator plus ``stream_loader``, which drops any source
+into the existing ``ShardedLoader`` so streaming reuses the same
+double-buffered prefetch, phantom-row padding, and mesh sharding as the
+batch pipeline.
+
+  * ``iterator_source``  — adapt any in-process iterable (generators,
+    Kafka-consumer-style cursors) with optional re-chunking.
+  * ``replay_source``    — replay a materialized array as a stream
+    (backfill / deterministic regression runs), optionally shuffled
+    per epoch.
+  * ``socket_sim_source``— a network-socket simulator: a producer thread
+    pushes chunks at a configurable arrival rate with jitter; the
+    consumer blocks like a ``recv``.  This is what the throughput
+    benchmark ingests from, so records/sec includes queue hand-off.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Callable, Iterable, Iterator, Optional, Sequence
+
+import numpy as np
+
+from .loader import ShardedLoader
+
+
+def iterator_source(it: Iterable, *, chunk_rows: Optional[int] = None,
+                    dtype=np.float32) -> Iterator[np.ndarray]:
+    """Adapt any iterable of array-likes into a chunk stream.
+
+    With ``chunk_rows`` set, incoming arrays are re-chunked to exactly
+    that many rows (tail carried over); otherwise chunks pass through
+    at their native size.
+    """
+    if chunk_rows is None:
+        for a in it:
+            a = np.asarray(a, dtype)
+            if a.size:
+                yield a
+        return
+    buf: Optional[np.ndarray] = None
+    for a in it:
+        a = np.asarray(a, dtype)
+        if not a.size:
+            continue
+        buf = a if buf is None or not buf.size else np.concatenate([buf, a])
+        while buf.shape[0] >= chunk_rows:
+            yield buf[:chunk_rows]
+            buf = buf[chunk_rows:]
+    if buf is not None and buf.shape[0]:
+        yield buf
+
+
+def replay_source(x: np.ndarray, chunk_rows: int, *, epochs: int = 1,
+                  shuffle: bool = False, seed: int = 0
+                  ) -> Iterator[np.ndarray]:
+    """Stream a materialized array in ``chunk_rows``-sized chunks.
+
+    ``epochs > 1`` replays the array (shuffled per epoch when asked) —
+    the backfill/regression-replay path of a streaming deployment.
+    """
+    x = np.asarray(x, np.float32)
+    rng = np.random.default_rng(seed)
+    for _ in range(epochs):
+        order = rng.permutation(x.shape[0]) if shuffle else None
+        xe = x[order] if order is not None else x
+        for i in range(0, xe.shape[0], chunk_rows):
+            yield xe[i:i + chunk_rows]
+
+
+def socket_sim_source(chunks: Iterable[np.ndarray], *,
+                      rate_hz: Optional[float] = None,
+                      jitter: float = 0.0, seed: int = 0,
+                      depth: int = 8) -> Iterator[np.ndarray]:
+    """Simulated socket: a producer thread delivers chunks into a bounded
+    queue at ``rate_hz`` arrivals/sec (± uniform ``jitter`` fraction);
+    ``rate_hz=None`` delivers as fast as the consumer drains.  Iterating
+    blocks on the queue exactly like a blocking ``recv``.
+    """
+    q: queue.Queue = queue.Queue(maxsize=depth)
+    stop = threading.Event()
+    rng = np.random.default_rng(seed)
+
+    def put(item) -> bool:
+        """Bounded put that gives up when the consumer has gone away."""
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def producer():
+        period = 0.0 if rate_hz is None else 1.0 / rate_hz
+        try:
+            for c in chunks:
+                if period:
+                    time.sleep(period * (1.0 + jitter * rng.uniform(-1, 1)))
+                if not put(("chunk", np.asarray(c, np.float32))):
+                    return                  # consumer abandoned the stream
+            put(("eos", None))
+        except BaseException as e:  # surface upstream failure to consumer
+            put(("error", e))
+
+    threading.Thread(target=producer, daemon=True).start()
+    try:
+        while True:
+            kind, item = q.get()
+            if kind == "error":
+                raise item
+            if kind == "eos":
+                return
+            yield item
+    finally:
+        stop.set()                  # unblock + retire the producer thread
+
+
+def stream_loader(source: Iterator[np.ndarray], batch_rows: int, *,
+                  mesh=None, data_axes: Sequence[str] = ("data",),
+                  prefetch: int = 2,
+                  transform: Optional[Callable[[np.ndarray], np.ndarray]]
+                  = None) -> ShardedLoader:
+    """Wrap any source in the batch pipeline's ``ShardedLoader`` so the
+    stream gets the same prefetch thread, fixed-shape phantom-padded
+    batches, and mesh placement as offline data."""
+    return ShardedLoader(source, batch_rows, mesh=mesh,
+                         data_axes=data_axes, prefetch=prefetch,
+                         transform=transform)

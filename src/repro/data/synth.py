@@ -69,6 +69,27 @@ def pima_like(n: int = 768, *, seed: int = 0):
     return make_blobs(n, 8, 2, spread=1.0, sep=1.1, seed=seed)
 
 
+def make_moving_blobs(n_chunks: int, chunk: int, d: int, c: int, *,
+                      drift_at: int, shift: float = 8.0,
+                      spread: float = 1.0, sep: float = 6.0, seed: int = 0):
+    """Drifting stream: yields ``(x, labels)`` chunks from a Gaussian
+    mixture whose component means all jump by ``shift`` (L2, random
+    directions) starting at chunk index ``drift_at`` — the synthetic
+    regime-change workload for `repro.stream` drift detection.
+    """
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0.0, sep, size=(c, d)).astype(np.float32)
+    delta = rng.normal(size=(c, d))
+    delta = (delta / np.linalg.norm(delta, axis=1, keepdims=True)
+             * shift).astype(np.float32)
+    for t in range(n_chunks):
+        ctr = centers + delta if t >= drift_at else centers
+        labels = rng.integers(0, c, size=(chunk,)).astype(np.int32)
+        x = ctr[labels] + rng.normal(0.0, spread,
+                                     size=(chunk, d)).astype(np.float32)
+        yield x.astype(np.float32), labels
+
+
 def iris() -> Tuple[np.ndarray, np.ndarray]:
     """Fisher's Iris, embedded (sepal-l, sepal-w, petal-l, petal-w)."""
     x = np.array(_IRIS, np.float32).reshape(150, 4)

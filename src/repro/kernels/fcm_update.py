@@ -87,9 +87,17 @@ def _pad_to(a: int, mult: int) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=("m", "tile_n", "interpret"))
-def fcm_sweep_pallas(x, w, centers, m: float = 2.0, *,
-                     tile_n: int = 1024, interpret: bool = False):
-    """Pallas-backed Alg.-1 sweep.  Returns (v_new, w_i, q) like fcm_sweep.
+def fcm_accumulate_pallas(x, w, centers, m: float = 2.0, *,
+                          tile_n: int = 1024, interpret: bool = False):
+    """Raw Alg.-1 accumulators — the *streaming* kernel entry point.
+
+    Returns ``(v_num, w_i, q)`` WITHOUT the final normalization: the
+    weighted center numerators (C, d), center masses (C,), and objective
+    contribution ().  All three are plain sums over records, so partial
+    results from successive chunks of a stream add elementwise —
+    ``accumulate`` over chunks then normalize once equals one sweep over
+    the concatenation up to float32 summation order
+    (`repro.kernels.ops.accumulate_chunks`).
 
     x: (N, d) float32/bf16;  w: (N,);  centers: (C, d).
     """
@@ -130,6 +138,16 @@ def fcm_sweep_pallas(x, w, centers, m: float = 2.0, *,
         interpret=interpret,
     )(xf, wf, vf)
 
-    w_i = wacc[0, :c]
-    v_new = vnum[:c, :d] / jnp.maximum(w_i, _D2_FLOOR)[:, None]
-    return v_new, w_i, q[0, 0]
+    return vnum[:c, :d], wacc[0, :c], q[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("m", "tile_n", "interpret"))
+def fcm_sweep_pallas(x, w, centers, m: float = 2.0, *,
+                     tile_n: int = 1024, interpret: bool = False):
+    """Pallas-backed Alg.-1 sweep.  Returns (v_new, w_i, q) like
+    ``core.fcm.fcm_sweep``: the accumulate entry point plus the one
+    normalization it defers."""
+    v_num, w_i, q = fcm_accumulate_pallas(x, w, centers, m, tile_n=tile_n,
+                                          interpret=interpret)
+    v_new = v_num / jnp.maximum(w_i, _D2_FLOOR)[:, None]
+    return v_new, w_i, q

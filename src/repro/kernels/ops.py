@@ -1,14 +1,18 @@
 """jit'd public wrappers for the Pallas kernels.
 
 ``fcm_sweep_kernel`` is drop-in compatible with ``repro.core.fcm.fcm_sweep``
-(pass it as ``sweep_fn=``).  On CPU it runs the kernel body in interpret
-mode; on TPU it lowers to Mosaic.
+(pass it as ``sweep_fn=``).  ``fcm_accumulate_kernel`` exposes the raw
+(un-normalized) accumulators for streaming, and ``accumulate_chunks``
+folds a chunk stream through it — one normalization at the end, exactly
+equal to a single sweep over the concatenated records.  On CPU the
+kernel body runs in interpret mode; on TPU it lowers to Mosaic.
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
-from .fcm_update import fcm_sweep_pallas
+from .fcm_update import _D2_FLOOR, fcm_accumulate_pallas, fcm_sweep_pallas
 
 
 def _on_cpu() -> bool:
@@ -18,3 +22,35 @@ def _on_cpu() -> bool:
 def fcm_sweep_kernel(x, w, centers, m: float = 2.0, *, tile_n: int = 1024):
     return fcm_sweep_pallas(x, w, centers, m, tile_n=tile_n,
                             interpret=_on_cpu())
+
+
+def fcm_accumulate_kernel(x, w, centers, m: float = 2.0, *,
+                          tile_n: int = 1024):
+    """Raw (v_num, w_i, q) accumulators for one record chunk."""
+    return fcm_accumulate_pallas(x, w, centers, m, tile_n=tile_n,
+                                 interpret=_on_cpu())
+
+
+def accumulate_chunks(chunks, weights, centers, m: float = 2.0, *,
+                      tile_n: int = 1024, accumulate_fn=None):
+    """One FCM sweep over a stream of chunks without materializing it.
+
+    ``chunks``/``weights`` are iterables of (n_i, d)/(n_i,) arrays —
+    e.g. a `repro.data.stream` source.  Per chunk the kernel emits raw
+    accumulators; they sum elementwise across chunks (every output is a
+    plain record sum) and normalize once — matching a single sweep over
+    the concatenation up to float32 summation order.  Returns
+    (v_new, w_i, q) like ``fcm_sweep``.
+    """
+    acc = accumulate_fn or fcm_accumulate_kernel
+    v_num, w_i, q = None, None, None
+    for x, w in zip(chunks, weights, strict=True):
+        vn, wi, qi = acc(x, w, centers, m, tile_n=tile_n)
+        if v_num is None:
+            v_num, w_i, q = vn, wi, qi
+        else:
+            v_num, w_i, q = v_num + vn, w_i + wi, q + qi
+    if v_num is None:
+        raise ValueError("accumulate_chunks: empty chunk stream")
+    v_new = v_num / jnp.maximum(w_i, _D2_FLOOR)[:, None]
+    return v_new, w_i, q

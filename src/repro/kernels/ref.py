@@ -6,13 +6,9 @@ import jax.numpy as jnp
 _D2_FLOOR = 1e-12
 
 
-def fcm_sweep_ref(x, w, centers, m: float = 2.0):
-    """Reference Alg.-1 sweep: returns (v_new, w_i, q).
-
-    Deliberately the textbook formulation (full N×C membership matrix) so
-    the kernel's tiled/no-U-matrix accumulation is checked against
-    independent math.
-    """
+def fcm_accumulate_ref(x, w, centers, m: float = 2.0):
+    """Reference raw accumulators (v_num, w_i, q) — oracle for
+    ``fcm_accumulate_pallas`` (sweep math with normalization deferred)."""
     x = x.astype(jnp.float32)
     w = w.astype(jnp.float32)
     v = centers.astype(jnp.float32)
@@ -23,9 +19,14 @@ def fcm_sweep_ref(x, w, centers, m: float = 2.0):
     lmin = jnp.min(logd, axis=-1, keepdims=True)
     r = jnp.exp(-expo * (logd - lmin))
     u = r / jnp.sum(r, axis=-1, keepdims=True)
-    um = jnp.power(u, m)
-    wum = um * w[:, None]
-    w_i = jnp.sum(wum, axis=0)
-    v_new = (wum.T @ x) / jnp.maximum(w_i, _D2_FLOOR)[:, None]
-    q = jnp.sum(wum * d2)
+    wum = jnp.power(u, m) * w[:, None]
+    return wum.T @ x, jnp.sum(wum, axis=0), jnp.sum(wum * d2)
+
+
+def fcm_sweep_ref(x, w, centers, m: float = 2.0):
+    """Reference Alg.-1 sweep: returns (v_new, w_i, q) — the accumulate
+    oracle plus the one deferred normalization (mirrors the
+    ``fcm_sweep_pallas`` / ``fcm_accumulate_pallas`` split)."""
+    v_num, w_i, q = fcm_accumulate_ref(x, w, centers, m)
+    v_new = v_num / jnp.maximum(w_i, _D2_FLOOR)[:, None]
     return v_new, w_i, q

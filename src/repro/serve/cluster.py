@@ -1,0 +1,46 @@
+"""Clustering-side serving: assignments against a live streaming model.
+
+`assign_stream` is the online analogue of scoring against a fixed model
+file: each incoming chunk is (optionally) folded into the
+`repro.stream.StreamingBigFCM` state and immediately scored against the
+freshest windowed centers — the serve path and the learn path share one
+model, so drift-triggered re-seeds show up in the very next response.
+
+`make_assigner` freezes the current centers into a jitted scorer for
+read-only replicas (the fan-out tier: one learner, many scorers).
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fcm import hard_assign, soft_assign
+
+
+def make_assigner(centers, *, m: float = 2.0, soft: bool = False):
+    """Jitted scorer against a FROZEN center snapshot (read replicas)."""
+    v = jnp.asarray(centers, jnp.float32)
+    if soft:
+        return jax.jit(lambda x: soft_assign(jnp.asarray(x, jnp.float32),
+                                             v, m))
+    return jax.jit(lambda x: hard_assign(jnp.asarray(x, jnp.float32), v))
+
+
+def assign_stream(model, source, *, soft: bool = False,
+                  update: bool = True
+                  ) -> Iterator[Tuple[np.ndarray, Optional[object]]]:
+    """Serve assignments over a chunk stream.
+
+    ``model`` is a `StreamingBigFCM`; ``source`` yields (n_i, d) arrays
+    (any `repro.data.stream` source).  Per chunk, yields
+    ``(assignments, report)`` where ``report`` is the `IngestReport`
+    when ``update=True`` (online learning while serving) and ``None``
+    when the model is frozen (scoring-only replica).
+    """
+    for chunk in source:
+        x = np.asarray(chunk, np.float32)
+        report = model.ingest(x) if update else None
+        yield np.asarray(model.assign(x, soft=soft)), report

@@ -1,0 +1,16 @@
+"""Online/windowed BigFCM — continuous clustering over unbounded streams.
+
+See `streaming.StreamingBigFCM` for the state machine, `window` for the
+decayed sliding-window summary algebra, and `drift.DriftDetector` for
+re-seed triggering.  Stream *sources* live in `repro.data.stream`.
+"""
+from .drift import DriftConfig, DriftDetector
+from .streaming import (IngestReport, StreamConfig, StreamingBigFCM,
+                        StreamState)
+from .window import init_window, merge_summaries, push_summary, window_mass
+
+__all__ = [
+    "DriftConfig", "DriftDetector", "IngestReport", "StreamConfig",
+    "StreamingBigFCM", "StreamState", "init_window", "merge_summaries",
+    "push_summary", "window_mass",
+]

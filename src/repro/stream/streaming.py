@@ -1,0 +1,327 @@
+"""StreamingBigFCM — the paper's one-job map-reduce generalized to time.
+
+The batch algorithm's shape (combiners converge locally, a weighted-FCM
+reducer merges a few KB of summaries) is already an online primitive;
+this module turns it into a state machine over an unbounded stream:
+
+  ingest(batch):
+    1. **drift probe** — fuzzy objective of the current global centers on
+       the incoming batch, per unit mass (`drift.DriftDetector`).  A
+       flagged batch re-runs the paper's *driver* (FCM vs WFCMPB race on
+       a fresh sample, `core.bigfcm.run_driver`) to re-seed, and zeroes
+       the window — the stale regime's mass is forgotten at once.
+    2. **combiner** — per-batch (weighted) FCM from the current centers;
+       on a device mesh each shard converges locally inside `shard_map`
+       and an in-program WFCM merges the per-device summaries (the
+       paper's reducer = hierarchy level 1: across devices).
+    3. **window** — the batch summary lands in a decayed sliding window
+       (`window.push_summary`) and the window is WFCM-merged pairwise
+       (hierarchy level 2: across time) into the new global model.
+
+State is a flat pytree of small arrays (`StreamState`) so
+`ft.checkpoint.CheckpointManager` persists a live stream with the same
+atomic/async machinery as training jobs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Iterable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core.bigfcm import BigFCMConfig, run_driver
+from repro.core.fcm import fcm, fcm_sweep, hard_assign, soft_assign
+from repro.core.metrics import fuzzy_objective
+from .drift import DriftConfig, DriftDetector
+from .window import (init_window, merge_summaries, push_summary,
+                     window_mass)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    n_clusters: int
+    m: float = 2.0
+    combiner_eps: float = 1e-8
+    reducer_eps: float = 5e-11
+    max_iter: int = 300
+    merge_max_iter: int = 200
+    window: int = 8                  # sliding-window slots (mini-batches)
+    decay: float = 0.9               # per-push exponential forgetting
+    hierarchical: bool = True        # pairwise-tree window merge
+    combiner_mode: str = "converge"  # "converge" | "sweep" (one-pass)
+    use_kernel: bool = False         # Pallas sweep in combiner + merges
+    driver_sample: int = 512         # sample size for (re)seed driver race
+    drift: DriftConfig = DriftConfig()
+    reseed_cooldown: int = 3         # min batches between re-seeds
+    seed: int = 0
+
+
+class StreamState(NamedTuple):
+    """Checkpointable pytree — everything a restart needs."""
+    centers: jax.Array        # (C, d) global windowed centers
+    weights: jax.Array        # (C,)  their decayed masses
+    win_centers: jax.Array    # (W, C, d) ring buffer of batch summaries
+    win_weights: jax.Array    # (W, C)
+    cursor: jax.Array         # () i32 next window slot
+    step: jax.Array           # () i32 batches ingested
+    since_reseed: jax.Array   # () i32 batches since last (re)seed
+    reseeds: jax.Array        # () i32 driver re-seed count
+    key: jax.Array            # PRNG key for sampling/seeding
+
+
+class IngestReport(NamedTuple):
+    step: int
+    drifted: bool
+    reseeded: bool
+    reason: str               # "" | "objective" | "shift"
+    objective_pre: float      # stale-center objective per unit mass
+    objective_post: float     # merged-center objective per unit mass
+    shift: float              # max per-center L2 move of the global model
+    combiner_iters: np.ndarray
+    mass: float               # decayed record mass in the window
+
+
+def _sweep_fn(cfg: StreamConfig):
+    if not cfg.use_kernel:
+        return None
+    from repro.kernels.ops import fcm_sweep_kernel
+    return fcm_sweep_kernel
+
+
+def _q_norm(x, w, centers, *, m):
+    """Fuzzy objective per unit record mass (the drift statistic)."""
+    q = fuzzy_objective(x, centers, m, point_weights=w)
+    return q / jnp.maximum(jnp.sum(w), 1e-12)
+
+
+def _combine_local(x, w, centers, *, cfg: StreamConfig, sweep):
+    """One batch summary: local FCM to convergence, or a single
+    accumulate sweep (``combiner_mode="sweep"`` — the cheapest online
+    mode, one pass per batch)."""
+    if cfg.combiner_mode == "sweep":
+        v, wi, _ = (sweep or fcm_sweep)(x, w, centers, cfg.m)
+        return v, wi, jnp.int32(1)
+    res = fcm(x, centers, m=cfg.m, eps=cfg.combiner_eps,
+              max_iter=cfg.max_iter, point_weights=w, sweep_fn=sweep)
+    return res.centers, res.center_weights, res.n_iter
+
+
+def _combine_mesh_body(x_l, w_l, v, *, cfg: StreamConfig, sweep, data_axes):
+    """shard_map body: per-device combiner + in-program device reduce."""
+    c_l, w_l_c, it = _combine_local(x_l, w_l, v, cfg=cfg, sweep=sweep)
+    vg = jax.lax.all_gather(c_l, data_axes).reshape(-1, v.shape[-1])
+    wg = jax.lax.all_gather(w_l_c, data_axes).reshape(-1)
+    red = fcm(vg, v, m=cfg.m, eps=cfg.reducer_eps,
+              max_iter=cfg.merge_max_iter, point_weights=wg, sweep_fn=sweep)
+    its = jax.lax.all_gather(it, data_axes)
+    return red.centers, red.center_weights, its
+
+
+class StreamingBigFCM:
+    """Online/windowed BigFCM over an unbounded chunk stream."""
+
+    def __init__(self, cfg: StreamConfig, *, mesh=None,
+                 data_axes: Sequence[str] = ("data",)):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.data_axes = tuple(data_axes)
+        self.state: Optional[StreamState] = None
+        self.detector = DriftDetector(cfg.drift)
+        sweep = _sweep_fn(cfg)
+        # Driver config for (re)seeding: the paper's FCM-vs-WFCMPB race.
+        self._bcfg = BigFCMConfig(
+            n_clusters=cfg.n_clusters, m=cfg.m, driver_eps=cfg.reducer_eps,
+            combiner_eps=cfg.combiner_eps, reducer_eps=cfg.reducer_eps,
+            max_iter=cfg.max_iter, sample_size=cfg.driver_sample,
+            use_kernel=cfg.use_kernel, seed=cfg.seed)
+        self._jq = jax.jit(partial(_q_norm, m=cfg.m))
+        if mesh is None:
+            self._jcomb = jax.jit(
+                partial(_combine_local, cfg=cfg, sweep=sweep))
+        else:
+            self._jcomb = jax.jit(shard_map(
+                partial(_combine_mesh_body, cfg=cfg, sweep=sweep,
+                        data_axes=self.data_axes),
+                mesh=mesh,
+                in_specs=(P(self.data_axes), P(self.data_axes), P(None, None)),
+                out_specs=(P(None, None), P(None), P(None)),
+                check_vma=False))
+        self._jmerge = jax.jit(partial(
+            merge_summaries, m=cfg.m, eps=cfg.reducer_eps,
+            max_iter=cfg.merge_max_iter, hierarchical=cfg.hierarchical,
+            sweep_fn=sweep))
+
+    # ------------------------------------------------------------- seed --
+    def _driver_seed(self, x: jax.Array, w: jax.Array,
+                     key: jax.Array) -> jax.Array:
+        """Run the paper's driver race on a sample of ``x`` → C seeds.
+
+        Sampling is mass-weighted so zero-weight phantom rows (loader
+        tail padding) can never become seeds — the sample size is capped
+        by the number of real rows because ``choice(replace=False)``
+        falls back to zero-probability rows once the weighted ones are
+        exhausted."""
+        k_sample, k_seed = jax.random.split(key)
+        n = x.shape[0]
+        n_real = int(jnp.sum(w > 0))
+        if n_real == 0:
+            raise ValueError("cannot seed StreamingBigFCM from a "
+                             "zero-mass (all-phantom) batch")
+        lam = min(self.cfg.driver_sample, n_real)
+        p = w / jnp.maximum(jnp.sum(w), 1e-12)
+        idx = jax.random.choice(k_sample, n, (lam,), replace=False, p=p)
+        v, _flag, _ts, _tf = run_driver(jnp.take(x, idx, axis=0),
+                                        self._bcfg, k_seed)
+        return v
+
+    def _fresh_state(self, x: jax.Array, w: jax.Array, key: jax.Array,
+                     reseeds: int, step: int) -> StreamState:
+        centers = self._driver_seed(x, w, key)
+        c, d = centers.shape
+        win_c, win_w = init_window(self.cfg.window, c, d)
+        return StreamState(
+            centers=centers, weights=jnp.zeros((c,), jnp.float32),
+            win_centers=win_c, win_weights=win_w,
+            cursor=jnp.int32(0), step=jnp.int32(step),
+            since_reseed=jnp.int32(0), reseeds=jnp.int32(reseeds),
+            key=jax.random.fold_in(key, reseeds + 1))
+
+    # ----------------------------------------------------------- ingest --
+    def _place(self, x, w):
+        x = jnp.asarray(x, jnp.float32)
+        w = (jnp.ones((x.shape[0],), jnp.float32) if w is None
+             else jnp.asarray(w, jnp.float32))
+        if self.mesh is not None:
+            spec = NamedSharding(self.mesh, P(self.data_axes))
+            x = jax.device_put(x, spec)
+            w = jax.device_put(w, NamedSharding(self.mesh,
+                                                P(self.data_axes)))
+        return x, w
+
+    def ingest(self, x, w=None) -> IngestReport:
+        """Fold one mini-batch into the windowed model."""
+        x, w = self._place(x, w)
+        if self.state is None:
+            self.state = self._fresh_state(
+                x, w, jax.random.PRNGKey(self.cfg.seed), reseeds=0, step=0)
+        st = self.state
+        cfg = self.cfg
+
+        q_pre = float(self._jq(x, w, st.centers))
+        can_reseed = int(st.since_reseed) >= cfg.reseed_cooldown
+        drifted, reason = False, ""
+        if can_reseed and self.detector.objective_drifted(q_pre):
+            drifted, reason = True, "objective"
+            st = self._fresh_state(x, w, st.key, int(st.reseeds) + 1,
+                                   int(st.step))
+            self.detector.reset()
+
+        def fold(st_in):
+            sc, sw, iters = self._jcomb(x, w, st_in.centers)
+            wc, ww, cur = push_summary(st_in.win_centers,
+                                       st_in.win_weights, st_in.cursor,
+                                       sc, sw, decay=cfg.decay)
+            mc, mw = self._jmerge(wc, ww)
+            sh = float(jnp.max(jnp.linalg.norm(mc - st_in.centers,
+                                               axis=-1)))
+            return wc, ww, cur, mc, mw, sh, iters
+
+        win_c, win_w, cursor, merged_c, merged_w, shift, iters = fold(st)
+        if (not drifted and can_reseed
+                and self.detector.shift_drifted(shift)):
+            drifted, reason = True, "shift"
+            st = self._fresh_state(x, w, st.key, int(st.reseeds) + 1,
+                                   int(st.step))
+            self.detector.reset()
+            win_c, win_w, cursor, merged_c, merged_w, shift, iters = fold(st)
+
+        q_post = float(self._jq(x, w, merged_c))
+        self.detector.observe(q_pre, shift, drifted)
+        self.state = StreamState(
+            centers=merged_c, weights=merged_w,
+            win_centers=win_c, win_weights=win_w, cursor=cursor,
+            step=st.step + 1,
+            since_reseed=jnp.int32(1) if drifted else st.since_reseed + 1,
+            reseeds=st.reseeds, key=st.key)
+        return IngestReport(
+            step=int(self.state.step), drifted=drifted, reseeded=drifted,
+            reason=reason, objective_pre=q_pre, objective_post=q_post,
+            shift=shift, combiner_iters=np.atleast_1d(np.asarray(iters)),
+            mass=float(window_mass(win_w)))
+
+    def run(self, batches: Iterable, *, on_report=None):
+        """Drive ingest over a loader/source of ``(x, w)`` or ``x``."""
+        reports = []
+        for item in batches:
+            x, w = item if isinstance(item, tuple) else (item, None)
+            if w is not None and np.issubdtype(
+                    np.asarray(w).dtype, np.integer):
+                raise ValueError(
+                    "run() got an (x, integer-array) tuple — that looks "
+                    "like (records, labels) from a synth generator, not "
+                    "(records, point weights); pass x alone or float "
+                    "weights")
+            rep = self.ingest(x, w)
+            reports.append(rep)
+            if on_report is not None:
+                on_report(rep)
+        return reports
+
+    # ------------------------------------------------------------ serve --
+    def assign(self, x, *, soft: bool = False):
+        """Assignments of ``x`` against the live windowed centers."""
+        if self.state is None:
+            raise RuntimeError("StreamingBigFCM has ingested no data yet")
+        x = jnp.asarray(x, jnp.float32)
+        if soft:
+            return soft_assign(x, self.state.centers, self.cfg.m)
+        return hard_assign(x, self.state.centers)
+
+    # ------------------------------------------------------- checkpoint --
+    def state_dict(self) -> dict:
+        if self.state is None:
+            raise RuntimeError("no state to checkpoint yet")
+        tree = dict(self.state._asdict())
+        for k, v in self.detector.state_arrays().items():
+            tree[f"drift_{k}"] = v
+        return tree
+
+    def _template(self, d: int) -> dict:
+        c, wnd = self.cfg.n_clusters, self.cfg.window
+        win_c, win_w = init_window(wnd, c, d)
+        z32 = jnp.int32(0)
+        tree = dict(StreamState(
+            centers=jnp.zeros((c, d), jnp.float32),
+            weights=jnp.zeros((c,), jnp.float32),
+            win_centers=win_c, win_weights=win_w, cursor=z32, step=z32,
+            since_reseed=z32, reseeds=z32,
+            key=jax.random.PRNGKey(0))._asdict())
+        det = DriftDetector(self.cfg.drift)
+        for k, v in det.state_arrays().items():
+            tree[f"drift_{k}"] = v
+        return tree
+
+    def save(self, ckpt) -> None:
+        """Persist into an `ft.checkpoint.CheckpointManager`."""
+        if self.state is None:
+            raise RuntimeError("no state to checkpoint yet")
+        ckpt.save(int(self.state.step), self.state_dict())
+
+    @classmethod
+    def restore(cls, ckpt, cfg: StreamConfig, d: int, *, mesh=None,
+                data_axes: Sequence[str] = ("data",),
+                step: Optional[int] = None) -> "StreamingBigFCM":
+        """Rebuild a live stream from a checkpoint (d = feature count)."""
+        model = cls(cfg, mesh=mesh, data_axes=data_axes)
+        tree = ckpt.restore(model._template(d), step)
+        det = {k[len("drift_"):]: v for k, v in tree.items()
+               if k.startswith("drift_")}
+        model.detector.load_state_arrays(det)
+        model.state = StreamState(**{k: v for k, v in tree.items()
+                                     if not k.startswith("drift_")})
+        return model

@@ -4,13 +4,21 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.fcm_update import fcm_sweep_pallas
-from repro.kernels.ops import fcm_sweep_kernel
-from repro.kernels.ref import fcm_sweep_ref
+from repro.kernels.fcm_update import fcm_accumulate_pallas, fcm_sweep_pallas
+from repro.kernels.ops import (accumulate_chunks, fcm_accumulate_kernel,
+                               fcm_sweep_kernel)
+from repro.kernels.ref import fcm_accumulate_ref, fcm_sweep_ref
 
 SHAPES = [
     (64, 2, 2), (100, 130, 7), (257, 4, 3), (1000, 18, 10),
     (2048, 28, 50), (31, 41, 23), (512, 8, 129),
+]
+
+# C and d above the 128 MXU lane but NOT multiples of it — both the
+# center and feature axes get zero-padded and the phantom centers must
+# be masked out of the membership denominator.
+OFF_LANE_SHAPES = [
+    (300, 130, 131), (200, 129, 140), (96, 257, 129), (513, 131, 200),
 ]
 
 
@@ -66,6 +74,51 @@ def test_kernel_tile_invariance(tile_n):
     for g, e in zip(got, want):
         np.testing.assert_allclose(np.asarray(g), np.asarray(e),
                                    rtol=3e-4, atol=3e-5)
+
+
+@pytest.mark.parametrize("n,d,c", OFF_LANE_SHAPES)
+def test_kernel_phantom_masking_off_lane_shapes(n, d, c):
+    """Parity where C and d are not multiples of 128 (phantom-center
+    masking + feature-axis padding both in play)."""
+    rng = np.random.default_rng(n * 7 + d + c)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.1, 3.0, size=(n,)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(c, d)).astype(np.float32))
+    got = fcm_sweep_kernel(x, w, v, 2.0)
+    want = fcm_sweep_ref(x, w, v, 2.0)
+    for g, e in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(e),
+                                   rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("n,d,c", [(300, 13, 6), (257, 130, 131)])
+def test_accumulate_matches_ref(n, d, c):
+    rng = np.random.default_rng(n + d + c)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.1, 2.0, size=(n,)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(c, d)).astype(np.float32))
+    got = fcm_accumulate_kernel(x, w, v, 2.0)
+    want = fcm_accumulate_ref(x, w, v, 2.0)
+    for g, e in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(e),
+                                   rtol=3e-4, atol=3e-3)
+
+
+def test_accumulate_chunks_equals_single_sweep():
+    """The streaming property: raw accumulators from chunk slices sum to
+    the whole — one normalization at the end equals one full sweep."""
+    rng = np.random.default_rng(17)
+    x = jnp.asarray(rng.normal(size=(900, 11)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.5, 1.5, size=(900,)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(5, 11)).astype(np.float32))
+    cuts = [0, 250, 600, 900]
+    chunks = [x[a:b] for a, b in zip(cuts, cuts[1:])]
+    ws = [w[a:b] for a, b in zip(cuts, cuts[1:])]
+    got = accumulate_chunks(chunks, ws, v, 2.0)
+    want = fcm_sweep_kernel(x, w, v, 2.0)
+    for g, e in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(e),
+                                   rtol=1e-5, atol=1e-5)
 
 
 def test_kernel_inside_full_fcm_loop():

@@ -1,0 +1,25 @@
+"""Host-side record parsing (`repro.data.loader`)."""
+import warnings
+
+import numpy as np
+
+from repro.data import parse_records, normalize
+
+
+def test_parse_records_no_deprecation_warning():
+    """Regression: parse_records used np.fromstring, deprecated since
+    numpy 1.14 (binary mode removal pending) — parsing must be clean."""
+    lines = ["1.0, 2.0, 3.0", "  ", "4,5,6", "7.5 , 8.5 , 9.5"]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        got = parse_records(lines)
+    np.testing.assert_allclose(
+        got, [[1, 2, 3], [4, 5, 6], [7.5, 8.5, 9.5]])
+    assert got.dtype == np.float32
+
+
+def test_parse_records_custom_separator_and_normalize():
+    got = parse_records(["1;2", "3;4"], sep=";")
+    np.testing.assert_allclose(got, [[1, 2], [3, 4]])
+    norm = normalize(got)
+    np.testing.assert_allclose(norm, [[0, 0], [1, 1]])

@@ -1,0 +1,240 @@
+"""`repro.stream` — online/windowed BigFCM (PR 2 tentpole).
+
+Covers the acceptance criterion (drift on a moving-cluster stream is
+detected, triggers a driver re-seed, and the final windowed centers
+match a fresh batch fit on the last window within 5% relative
+objective), plus the window algebra, drift detector, stream sources,
+serving hook, checkpoint round-trip, and the multi-device combiner.
+"""
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BigFCMConfig, bigfcm_fit
+from repro.core.metrics import fuzzy_objective
+from repro.data import (iterator_source, make_blobs, make_moving_blobs,
+                        replay_source, socket_sim_source, stream_loader)
+from repro.ft import CheckpointManager
+from repro.serve import assign_stream, make_assigner
+from repro.stream import (DriftConfig, DriftDetector, StreamConfig,
+                          StreamingBigFCM, init_window, merge_summaries,
+                          push_summary)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+# ------------------------------------------------------------ acceptance --
+
+def test_streaming_drift_reseed_matches_batch_fit():
+    """The ISSUE-2 acceptance criterion, end to end."""
+    c, d, chunk, n_chunks, drift_at, window = 4, 6, 1500, 8, 4, 3
+    cfg = StreamConfig(n_clusters=c, window=window, decay=0.8,
+                       max_iter=300, driver_sample=384, seed=0)
+    model = StreamingBigFCM(cfg)
+    chunks = []
+    for x, _ in make_moving_blobs(n_chunks, chunk, d, c,
+                                  drift_at=drift_at, shift=10.0, seed=5):
+        chunks.append(x)
+        model.ingest(x)
+
+    # drift was detected and re-seeded the model exactly once
+    assert int(model.state.reseeds) == 1
+    assert int(model.state.step) == n_chunks
+
+    # final windowed centers vs a fresh batch fit on the last window
+    x_win = jnp.asarray(np.concatenate(chunks[-window:]))
+    batch = bigfcm_fit(x_win, BigFCMConfig(n_clusters=c, sample_size=384,
+                                           seed=1))
+    q_stream = float(fuzzy_objective(x_win, model.state.centers, cfg.m))
+    q_batch = float(fuzzy_objective(x_win, batch.centers, cfg.m))
+    assert q_stream <= 1.05 * q_batch, (q_stream, q_batch)
+
+
+def test_streaming_stationary_no_false_reseed():
+    cfg = StreamConfig(n_clusters=3, window=3, max_iter=200,
+                       driver_sample=256, seed=0)
+    model = StreamingBigFCM(cfg)
+    x, _ = make_blobs(8000, 5, 3, seed=2)
+    for x_c in replay_source(x, 1000):
+        rep = model.ingest(x_c)
+        assert not rep.drifted
+    assert int(model.state.reseeds) == 0
+
+
+# ---------------------------------------------------------------- window --
+
+def test_window_merge_ignores_phantom_slots():
+    rng = np.random.default_rng(0)
+    centers = jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32))
+    weights = jnp.asarray(rng.uniform(1, 2, size=(4,)).astype(np.float32))
+    win_c, win_w = init_window(4, 4, 3)
+    win_c, win_w, cur = push_summary(win_c, win_w, jnp.int32(0),
+                                     centers, weights, decay=0.9)
+    merged_c, merged_w = merge_summaries(win_c, win_w, m=2.0)
+    # a single live slot merges to itself; phantoms contribute nothing
+    np.testing.assert_allclose(np.asarray(merged_c), np.asarray(centers),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(merged_w).sum(),
+                               np.asarray(weights).sum(), rtol=1e-5)
+    assert int(cur) == 1
+
+
+def test_window_decay_halves_old_mass():
+    v = jnp.ones((2, 2), jnp.float32)
+    w = jnp.ones((2,), jnp.float32)
+    win_c, win_w = init_window(3, 2, 2)
+    cur = jnp.int32(0)
+    for _ in range(3):
+        win_c, win_w, cur = push_summary(win_c, win_w, cur, v, w, decay=0.5)
+    # slot masses: 0.25, 0.5, 1.0 per push order
+    got = sorted(np.asarray(win_w).sum(axis=1).tolist())
+    np.testing.assert_allclose(got, [0.5, 1.0, 2.0])
+
+
+def test_window_hierarchical_matches_flat_merge():
+    rng = np.random.default_rng(3)
+    win_c = jnp.asarray(rng.normal(size=(4, 3, 2)).astype(np.float32))
+    win_w = jnp.asarray(rng.uniform(0.5, 2, size=(4, 3)).astype(np.float32))
+    tree_c, tree_w = merge_summaries(win_c, win_w, m=2.0, hierarchical=True)
+    flat_c, flat_w = merge_summaries(win_c, win_w, m=2.0, hierarchical=False)
+    # both reductions fit the same weighted sketch comparably well
+    # (mass is NOT conserved by WFCM — sum_i u^m < 1 for m > 1 — so the
+    # tree's extra merge rounds legitimately shrink total weight)
+    pts = win_c.reshape(-1, 2)
+    wts = win_w.reshape(-1)
+    q_tree = float(fuzzy_objective(pts, tree_c, point_weights=wts))
+    q_flat = float(fuzzy_objective(pts, flat_c, point_weights=wts))
+    assert np.isfinite(np.asarray(tree_c)).all()
+    assert q_tree <= 1.25 * q_flat and q_flat <= 1.25 * q_tree
+    assert float(tree_w.sum()) > 0 and float(flat_w.sum()) > 0
+
+
+# ----------------------------------------------------------------- drift --
+
+def test_drift_detector_flags_jump_not_noise():
+    det = DriftDetector(DriftConfig(min_batches=3, q_threshold=2.0))
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        q = 5.0 + rng.uniform(-0.2, 0.2)
+        assert not det.objective_drifted(q)
+        det.observe(q, 0.05, False)
+    assert det.objective_drifted(25.0)
+    # flagged batches must not contaminate the EWMA
+    det.observe(25.0, 3.0, True)
+    assert not det.objective_drifted(5.0)
+
+
+def test_drift_detector_state_roundtrip():
+    det = DriftDetector()
+    det.observe(3.0, 0.1, False)
+    det.observe(4.0, 0.2, False)
+    det2 = DriftDetector()
+    det2.load_state_arrays(det.state_arrays())
+    assert det2.n == det.n
+    assert det2.ewma_q == pytest.approx(det.ewma_q)
+    assert det2.ewma_shift == pytest.approx(det.ewma_shift)
+
+
+# --------------------------------------------------------------- sources --
+
+def test_sources_rechunk_and_replay():
+    chunks = list(iterator_source([np.ones((5, 2)), np.ones((7, 2))],
+                                  chunk_rows=4))
+    assert [c.shape[0] for c in chunks] == [4, 4, 4]
+    x = np.arange(20, dtype=np.float32).reshape(10, 2)
+    rep = list(replay_source(x, 4, epochs=2))
+    assert sum(c.shape[0] for c in rep) == 20
+    np.testing.assert_array_equal(np.concatenate(rep[:3]), x)
+
+
+def test_socket_sim_source_delivers_everything():
+    chunks = [np.full((3, 2), i, np.float32) for i in range(5)]
+    got = list(socket_sim_source(iter(chunks), rate_hz=200.0, jitter=0.5))
+    assert len(got) == 5
+    np.testing.assert_array_equal(np.concatenate(got),
+                                  np.concatenate(chunks))
+
+
+def test_stream_loader_reuses_sharded_prefetch():
+    src = replay_source(np.ones((10, 3), np.float32), 4)
+    batches = list(stream_loader(src, batch_rows=4))
+    assert len(batches) == 3
+    x, w = batches[-1]
+    # tail batch phantom-padded with zero weights
+    assert x.shape == (4, 3)
+    np.testing.assert_allclose(np.asarray(w), [1, 1, 0, 0])
+
+
+# ----------------------------------------------------------------- serve --
+
+def test_assign_stream_serves_while_learning():
+    cfg = StreamConfig(n_clusters=3, window=2, max_iter=150,
+                       driver_sample=256, seed=0)
+    model = StreamingBigFCM(cfg)
+    x, y = make_blobs(3000, 4, 3, seed=4)
+    outs = list(assign_stream(model, replay_source(x, 1000)))
+    assert len(outs) == 3
+    labels, rep = outs[-1]
+    assert labels.shape == (1000,) and rep.step == 3
+    # frozen replica scores identically to the live model
+    frozen = make_assigner(model.state.centers)
+    np.testing.assert_array_equal(np.asarray(frozen(x[-1000:])), labels)
+
+
+# ------------------------------------------------------------ checkpoint --
+
+def test_streaming_checkpoint_roundtrip():
+    cfg = StreamConfig(n_clusters=3, window=3, max_iter=150,
+                       driver_sample=256, seed=0)
+    model = StreamingBigFCM(cfg)
+    x, _ = make_blobs(4000, 5, 3, seed=6)
+    for x_c in replay_source(x, 1000):
+        model.ingest(x_c)
+    ckpt = CheckpointManager(tempfile.mkdtemp(prefix="stream_ckpt_"),
+                             async_save=False)
+    model.save(ckpt)
+    restored = StreamingBigFCM.restore(ckpt, cfg, d=5)
+    np.testing.assert_allclose(np.asarray(restored.state.centers),
+                               np.asarray(model.state.centers), atol=1e-6)
+    assert int(restored.state.step) == int(model.state.step)
+    assert restored.detector.n == model.detector.n
+    # the restored stream keeps ingesting (and keeps detector context)
+    rep = restored.ingest(x[:1000])
+    assert not rep.drifted
+
+
+# ------------------------------------------------------------ multidevice --
+
+def test_streaming_multidevice_combiner():
+    """Device-hierarchical combiner inside shard_map (4 virtual devices)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import sys
+        sys.path.insert(0, {src!r})
+        import jax, numpy as np
+        from repro.data import make_blobs, replay_source
+        from repro.stream import StreamConfig, StreamingBigFCM
+
+        mesh = jax.make_mesh((4,), ("data",))
+        cfg = StreamConfig(n_clusters=3, window=2, max_iter=120,
+                           merge_max_iter=80, driver_sample=256, seed=0)
+        model = StreamingBigFCM(cfg, mesh=mesh)
+        x, _ = make_blobs(4096, 4, 3, seed=1)
+        for x_c in replay_source(x, 2048):
+            rep = model.ingest(x_c)
+        assert rep.combiner_iters.shape == (4,), rep.combiner_iters
+        assert not rep.drifted
+        assert np.isfinite(np.asarray(model.state.centers)).all()
+        print("MULTIDEV_OK")
+    """).format(src=os.path.abspath(SRC))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "MULTIDEV_OK" in out.stdout
