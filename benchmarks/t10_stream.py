@@ -5,9 +5,9 @@ Measures the two latencies that bound a streaming deployment and writes
 name / us_per_call / derived):
 
   * **sustained ingest** — records/sec through the full state machine
-    (socket-sim source → combiner → window push → hierarchical WFCM
-    merge → drift stats), steady-state after the compile warm-up;
-  * **window merge latency** — the hierarchical WFCM reduce over the
+    (socket-sim source → combiner → window push → merge-plan WFCM
+    reduce → drift stats), steady-state after the compile warm-up;
+  * **window merge latency** — the `cfg.merge_plan` reduce over the
     (W, C, d) ring buffer alone (the per-batch serving-freshness cost);
   * **accumulate sweep** — the raw Pallas streaming-accumulate entry
     point (`fcm_accumulate_kernel`) chunk-merged over the same records,
@@ -56,7 +56,7 @@ def run() -> None:
     st = model.state
     t_merge = timeit(model._jmerge, st.win_centers, st.win_weights)
     _emit("stream/window_merge", t_merge * 1e6,
-          f"W={cfg.window} C={C} hierarchical")
+          f"W={cfg.window} C={C} {cfg.merge_plan}")
 
     ws = [np.ones((CHUNK,), np.float32)] * N_CHUNKS
     t_acc = timeit(lambda: accumulate_chunks(chunks[1:], ws,

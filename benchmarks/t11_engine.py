@@ -1,0 +1,102 @@
+"""Engine benchmark (PR 3, `repro.engine`): backend × workload matrix.
+
+Writes ``benchmarks/BENCH_engine.json``: records/sec for every
+registered sweep backend (``jnp`` / ``pallas`` / ``pallas_accumulate``)
+across the three merge-topology consumers —
+
+  * **batch**  — one accumulation sweep over a record block (the
+    combiner hot loop; the number every other mode is bounded by);
+  * **wfcmpb** — the progressive-block scan with its flat merge plan;
+  * **stream-window-merge** — the windowed plan collapsing a (W, C, d)
+    ring buffer: the WFCM rounds accumulate per-slot raw sums through
+    the backend's accumulate entry point (`fcm_accumulate_pallas` on the
+    Pallas backends) with one normalization per round.
+
+On CPU the Pallas backends run in interpret mode — their absolute
+numbers are correctness artifacts, not speed (the jnp rows are the CPU
+speed story; the BlockSpec tiling is the TPU deployment artifact).
+``pallas`` and ``pallas_accumulate`` share one kernel and differ only
+in entry point (in-jit vs out-of-kernel normalization), so their rows
+should track each other — a gap is dispatch overhead, not math.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import wfcmpb
+from repro.data import make_blobs
+from repro.engine import MergePlan, get_backend, merge_summaries
+from repro.stream import window_summary
+
+from .common import emit, timeit
+
+BACKENDS = ["jnp", "pallas", "pallas_accumulate"]
+N_BATCH, D, C = 16_384, 16, 8
+N_PB, BLOCK = 4_096, 1_024
+WINDOW = 8
+ROWS_JSON = []
+
+
+def _emit(name: str, us_per_call: float, derived: str = ""):
+    emit(name, us_per_call, derived)
+    ROWS_JSON.append({"name": name, "us_per_call": round(us_per_call, 1),
+                      "derived": derived})
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    x, _ = make_blobs(N_BATCH, D, C, seed=0)
+    x = jnp.asarray(x)
+    w = jnp.ones((N_BATCH,), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(C, D)).astype(np.float32))
+    win_c = jnp.asarray(rng.normal(size=(WINDOW, C, D)).astype(np.float32))
+    win_w = jnp.asarray(rng.uniform(0.5, 2.0, size=(WINDOW, C))
+                        .astype(np.float32))
+    win = window_summary(win_c, win_w)
+    plan = MergePlan("windowed", m=2.0, eps=1e-8, max_iter=60)
+
+    interp = " (interpret)" if jnp.zeros(()).devices().pop().platform == \
+        "cpu" else ""
+    for name in BACKENDS:
+        be = get_backend(name)
+        tag = "" if name == "jnp" else interp
+
+        # jit each workload exactly as its consumer deploys it (the
+        # driver jits fcm/wfcmpb, StreamingBigFCM jits the window merge),
+        # with the data as traced arguments — not baked-in constants
+        t = timeit(jax.jit(lambda a, b, q: be.sweep(a, b, q, 2.0)),
+                   x, w, v)
+        _emit(f"t11/{name}/batch_sweep", t * 1e6,
+              f"{N_BATCH / t:.0f} records/sec{tag}")
+
+        t = timeit(jax.jit(lambda a, q: wfcmpb(a, q, m=2.0, eps=1e-4,
+                                               max_iter=20,
+                                               merge_max_iter=20,
+                                               block_size=BLOCK,
+                                               backend=be)),
+                   x[:N_PB], v)
+        _emit(f"t11/{name}/wfcmpb", t * 1e6,
+              f"{N_PB / t:.0f} records/sec{tag}")
+
+        t = timeit(jax.jit(lambda s: merge_summaries(s, plan,
+                                                     backend=be).summary),
+                   win)
+        _emit(f"t11/{name}/stream_window_merge", t * 1e6,
+              f"W={WINDOW} C={C}: {WINDOW * C / t:.0f} sketch pts/sec"
+              f"{tag}")
+
+    out = os.path.join(os.path.dirname(__file__), "BENCH_engine.json")
+    with open(out, "w") as f:
+        json.dump({"bench": "t11_engine", "n_batch": N_BATCH, "d": D,
+                   "c": C, "n_pb": N_PB, "block": BLOCK, "window": WINDOW,
+                   "rows": ROWS_JSON}, f, indent=2)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    run()

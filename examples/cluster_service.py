@@ -11,14 +11,12 @@ weighted-combine math that merges combiner outputs merges epochs.
     PYTHONPATH=src python examples/cluster_service.py
 """
 import tempfile
-import time
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bigfcm import BigFCMConfig, bigfcm_fit
-from repro.core.fcm import fcm
 from repro.core.metrics import assign, clustering_accuracy, match_centers
+from repro.engine import MergePlan, Summary, merge_summaries
 from repro.data.loader import ShardedLoader, normalize
 from repro.data.synth import make_kdd_like
 from repro.ft.checkpoint import CheckpointManager
@@ -41,19 +39,20 @@ loader = ShardedLoader(stream, BATCH_ROWS, mesh=mesh, transform=normalize)
 cfg = BigFCMConfig(n_clusters=C, m=1.2, combiner_eps=1e-7,
                    reducer_eps=5e-11, max_iter=300)
 
+epoch_plan = MergePlan("flat", m=cfg.m, eps=cfg.reducer_eps,
+                       max_iter=cfg.max_iter)
 centers, weights = None, None
 for i, (batch, w) in enumerate(loader):
     monitor.start()
     res = bigfcm_fit(batch, cfg, mesh=mesh, point_weights=w)
     if centers is None:
         centers, weights = res.centers, res.center_weights
-    else:  # WFCM-merge this epoch's centers into the running summary
-        merged = fcm(jnp.concatenate([centers, res.centers]),
-                     centers, m=cfg.m, eps=cfg.reducer_eps,
-                     max_iter=cfg.max_iter,
-                     point_weights=jnp.concatenate(
-                         [weights, res.center_weights]))
-        centers, weights = merged.centers, merged.center_weights
+    else:  # the same engine merge that combines combiners merges epochs
+        merged = merge_summaries(
+            [Summary(centers, weights),
+             Summary(res.centers, res.center_weights)],
+            epoch_plan, init=centers)
+        centers, weights = merged.summary.centers, merged.summary.masses
     monitor.stop()
     ckpt.save(i, {"centers": centers, "weights": weights})
     print(f"macro-batch {i}: objective {float(res.objective):.1f}, "

@@ -23,9 +23,16 @@ from repro.stream import StreamConfig, StreamingBigFCM
 
 C, D, CHUNK, N_CHUNKS, DRIFT_AT = 5, 12, 4000, 12, 6
 
+# The engine config axis: ``backend`` picks the sweep implementation
+# ("auto" = jnp on CPU, the fused Pallas kernel on TPU) and
+# ``merge_plan`` the window topology ("windowed" = the whole window
+# collapses in ONE WFCM accumulating raw per-slot sums in-kernel).
 cfg = StreamConfig(n_clusters=C, window=4, decay=0.9, max_iter=300,
-                   driver_sample=512, seed=0)
+                   driver_sample=512, backend="auto",
+                   merge_plan="windowed", seed=0)
 model = StreamingBigFCM(cfg)
+print(f"engine: backend={model.backend.name}  "
+      f"window merge plan={cfg.merge_plan}")
 ckpt = CheckpointManager(tempfile.mkdtemp(prefix="repro_stream_ckpt_"))
 
 truth = {}   # chunk index -> labels (kept aside; the model never sees them)

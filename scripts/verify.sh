@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 / fast verify wrapper (ROADMAP "Tier-1 verify" / "Fast verify").
+#
+#   scripts/verify.sh          # fast: skips the two ~8-min `slow`
+#                              # multi-device subprocess tests
+#   scripts/verify.sh full     # the full tier-1 suite (~27 min on 1 core)
+#
+# Extra args after the mode pass through to pytest:
+#   scripts/verify.sh fast tests/test_engine.py -k parity
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+mode="${1:-fast}"
+[ "$#" -gt 0 ] && shift
+case "$mode" in
+  full) exec python -m pytest -x -q "$@" ;;
+  fast) exec python -m pytest -x -q -m "not slow" "$@" ;;
+  *) echo "usage: scripts/verify.sh [fast|full] [pytest args...]" >&2
+     exit 2 ;;
+esac

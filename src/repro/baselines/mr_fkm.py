@@ -20,12 +20,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.fcm import FCMResult, fcm_sweep
+from repro.core.fcm import FCMResult
+from repro.engine import resolve_backend
 
 
 @partial(jax.jit, static_argnames=("m",))
 def _one_sweep(x, w, centers, m: float):
-    v_new, w_i, q = fcm_sweep(x, w, centers, m)
+    v_new, w_i, q = resolve_backend(None).sweep(x, w, centers, m)
     delta = jnp.max(jnp.sum((v_new - centers) ** 2, axis=-1))
     return v_new, w_i, q, delta
 

@@ -14,10 +14,14 @@ Structure mirrors the paper exactly:
              a slow shard only delays the final gather (the TPU analogue
              of Hadoop's combiner locality + speculative execution).
   Reducer  — `all_gather` of the (P·C centers, P·C weights) — a few KB —
-             then a replicated WFCM over them.  With a pod axis,
-             ``hierarchical=True`` reduces within each pod first and then
-             across pods (the paper's "multiple reduce jobs" variant).
+             then one `engine.merge_summaries` flat plan over them.  With
+             a pod axis, ``hierarchical=True`` merges within each pod
+             first and then across pods (the paper's "multiple reduce
+             jobs" variant) — the same plan at two gather levels.
 
+The sweep implementation is a single config axis: ``cfg.backend`` names a
+`repro.engine.SweepBackend` (``"auto"`` resolves per platform), resolved
+once in `bigfcm_fit` and threaded to the driver, combiner, and reducer.
 The combiner+reducer is ONE jit'd XLA program: the paper's "just one
 map-reduce job works iteratively" claim.  The per-iteration-job baseline
 (Ludwig / Mahout FKM) lives in `repro.baselines.mr_fkm`.
@@ -31,12 +35,13 @@ from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.engine import (MergePlan, Summary, merge_summaries,
+                          resolve_backend)
 
-from .fcm import FCMResult, fcm, membership_terms, pairwise_sqdist
+from .fcm import fcm
 from .sampling import parker_hall_sample_size
 from .wfcmpb import wfcmpb
 
@@ -54,9 +59,14 @@ class BigFCMConfig:
     sample_size: Optional[int] = None   # override Eq. (4) if set
     block_size: int = 2048         # WFCMPB block size
     hierarchical: bool = False     # two-level reduce over ('data') then ('pod')
-    use_kernel: bool = False       # Pallas fcm sweep in the combiner
+    backend: str = "auto"          # engine sweep backend (jnp/pallas/...)
     use_driver: bool = True        # False = random seeds (Table 2 baseline)
     seed: int = 0
+
+    def reducer_plan(self) -> MergePlan:
+        """The reducer's merge plan (paper line 13 seeds with V_1)."""
+        return MergePlan("flat", seed="first", m=self.m,
+                         eps=self.reducer_eps, max_iter=self.max_iter)
 
 
 class BigFCMDiagnostics(NamedTuple):
@@ -75,13 +85,6 @@ class BigFCMResult(NamedTuple):
     diagnostics: BigFCMDiagnostics
 
 
-def _sweep_fn(cfg: BigFCMConfig):
-    if not cfg.use_kernel:
-        return None
-    from repro.kernels.ops import fcm_sweep_kernel
-    return fcm_sweep_kernel
-
-
 # ---------------------------------------------------------------- driver ---
 
 def run_driver(x_sample: jax.Array, cfg: BigFCMConfig, key: jax.Array):
@@ -89,13 +92,13 @@ def run_driver(x_sample: jax.Array, cfg: BigFCMConfig, key: jax.Array):
     c = cfg.n_clusters
     idx = jax.random.choice(key, x_sample.shape[0], (c,), replace=False)
     seeds = jnp.take(x_sample, idx, axis=0)
-    sweep = _sweep_fn(cfg)
+    be = resolve_backend(cfg.backend)
 
     f_fcm = jax.jit(partial(fcm, m=cfg.m, eps=cfg.driver_eps,
-                            max_iter=cfg.max_iter, sweep_fn=sweep))
+                            max_iter=cfg.max_iter, backend=be))
     f_pb = jax.jit(partial(wfcmpb, m=cfg.m, eps=cfg.driver_eps,
                            max_iter=cfg.max_iter, block_size=cfg.block_size,
-                           sweep_fn=sweep))
+                           backend=be))
     # Warm up compilation outside the race (Hadoop's JVM is warm too).
     jax.block_until_ready(f_fcm(x_sample, seeds))
     jax.block_until_ready(f_pb(x_sample, seeds))
@@ -115,45 +118,41 @@ def run_driver(x_sample: jax.Array, cfg: BigFCMConfig, key: jax.Array):
 # --------------------------------------------------- combiner + reducer ---
 
 def _combine_reduce(x_local, w_local, v_init, *, cfg: BigFCMConfig,
-                    flag: bool, data_axes, pod_axis):
-    """shard_map body: local clustering then weighted hierarchical reduce."""
-    sweep = _sweep_fn(cfg)
+                    flag: bool, backend, data_axes, pod_axis):
+    """shard_map body: local clustering, then the gathered summary stack
+    through the engine's flat merge plan (once, or per hierarchy level)."""
     if flag:
         local = fcm(x_local, v_init, m=cfg.m, eps=cfg.combiner_eps,
                     max_iter=cfg.max_iter, point_weights=w_local,
-                    sweep_fn=sweep)
+                    backend=backend)
     else:
         local = wfcmpb(x_local, v_init, m=cfg.m, eps=cfg.combiner_eps,
                        max_iter=cfg.max_iter, block_size=cfg.block_size,
-                       point_weights=w_local, sweep_fn=sweep)
+                       point_weights=w_local, backend=backend)
+    plan = cfg.reducer_plan()
 
-    def gather_reduce(centers, weights, axes, init):
-        vg = jax.lax.all_gather(centers, axes)      # (P, C, d)
-        wg = jax.lax.all_gather(weights, axes)      # (P, C)
-        pts = vg.reshape(-1, centers.shape[-1])
-        wts = wg.reshape(-1)
-        # Paper line 13 seeds the reducer WFCM with V_1 (the first
-        # combiner's centers); ``init`` carries exactly that.
-        return fcm(pts, init, m=cfg.m, eps=cfg.reducer_eps,
-                   max_iter=cfg.max_iter, point_weights=wts, sweep_fn=sweep)
+    def gather_merge(summary: Summary, axes, init):
+        gathered = Summary(jax.lax.all_gather(summary.centers, axes),
+                           jax.lax.all_gather(summary.masses, axes))
+        # ``init`` carries the hierarchy level's explicit seed; the flat
+        # plan's seed="first" (V_1, paper line 13) applies when None.
+        return merge_summaries(gathered, plan, backend=backend, init=init)
 
+    local_sum = Summary(local.centers, local.center_weights)
     if cfg.hierarchical and pod_axis is not None:
         inner_axes = tuple(a for a in data_axes if a != pod_axis)
-        mid = gather_reduce(local.centers, local.center_weights,
-                            inner_axes, local.centers)
-        red = gather_reduce(mid.centers, mid.center_weights,
-                            (pod_axis,), mid.centers)
+        mid = gather_merge(local_sum, inner_axes, local.centers)
+        red = gather_merge(mid.summary, (pod_axis,), mid.summary.centers)
     else:
-        v1 = jax.lax.all_gather(local.centers, data_axes)[0]
-        red = gather_reduce(local.centers, local.center_weights,
-                            data_axes, v1)
+        red = gather_merge(local_sum, data_axes, None)
 
-    # Global objective of the final centers over the full dataset.
-    um = membership_terms(x_local, red.centers, cfg.m) * w_local[:, None]
-    q_local = jnp.sum(um * pairwise_sqdist(x_local, red.centers))
+    # Global objective of the final centers over the full dataset —
+    # the accumulate entry's q output (Σ w·u^m·d²), through the backend.
+    centers = red.summary.centers
+    _, _, q_local = backend.accumulate(x_local, w_local, centers, cfg.m)
     q = jax.lax.psum(q_local, data_axes)
     iters = jax.lax.all_gather(local.n_iter, data_axes)
-    return red.centers, red.center_weights, q, iters, red.n_iter
+    return centers, red.summary.masses, q, iters, red.n_iter
 
 
 # ------------------------------------------------------------------ fit ---
@@ -171,6 +170,7 @@ def bigfcm_fit(
     key = key if key is not None else jax.random.PRNGKey(cfg.seed)
     k_sample, k_seed = jax.random.split(key)
     n = x.shape[0]
+    be = resolve_backend(cfg.backend)
 
     lam = cfg.sample_size or parker_hall_sample_size(
         cfg.n_clusters, cfg.r, cfg.alpha)
@@ -190,12 +190,13 @@ def bigfcm_fit(
          else jnp.asarray(point_weights, jnp.float32))
 
     if mesh is None or len(mesh.devices.flatten()) == 1:
-        sweep = _sweep_fn(cfg)
         local = fcm(x, v_init, m=cfg.m, eps=cfg.combiner_eps,
-                    max_iter=cfg.max_iter, point_weights=w, sweep_fn=sweep)
-        red = fcm(local.centers, local.centers, m=cfg.m, eps=cfg.reducer_eps,
-                  max_iter=cfg.max_iter, point_weights=local.center_weights,
-                  sweep_fn=sweep)
+                    max_iter=cfg.max_iter, point_weights=w, backend=be)
+        # Degenerate reduce (one combiner summary): the reducer WFCM is
+        # just a polish of the local sketch against itself.
+        red = fcm(local.centers, local.centers, m=cfg.m,
+                  eps=cfg.reducer_eps, max_iter=cfg.max_iter,
+                  point_weights=local.center_weights, backend=be)
         diag = BigFCMDiagnostics(flag, t_s, t_f, lam,
                                  local.n_iter[None], red.n_iter)
         return BigFCMResult(red.centers, red.center_weights, red.objective,
@@ -205,7 +206,7 @@ def bigfcm_fit(
     pod_axis = "pod" if "pod" in mesh.axis_names else None
     x_spec = P(data_axes)
     job = shard_map(
-        partial(_combine_reduce, cfg=cfg, flag=flag,
+        partial(_combine_reduce, cfg=cfg, flag=flag, backend=be,
                 data_axes=data_axes, pod_axis=pod_axis),
         mesh=mesh,
         in_specs=(x_spec, P(data_axes), P(None, None)),

@@ -8,8 +8,11 @@ numerators ``V_i += w_k · u_ik^m · x_k`` and denominators
 the weighted FCM (WFCM, paper Eq. 2) is the same code with weights — the
 paper's reducer runs this over (center, weight) pairs from the combiners.
 
-All loops are ``jax.lax`` control flow so the whole clustering run is ONE
-XLA program (the paper's "one map-reduce job" property).
+The sweep math and the convergence loop live in `repro.engine` (one
+implementation under every consumer, selectable per `SweepBackend`);
+this module is the paper-facing API and re-exports the primitives under
+their historical names.  The whole clustering run is ONE XLA program
+(the paper's "one map-reduce job" property).
 """
 from __future__ import annotations
 
@@ -17,16 +20,16 @@ import functools
 from typing import NamedTuple, Optional
 
 import jax
-import jax.numpy as jnp
 
-_D2_FLOOR = 1e-12  # distance floor: a record sitting exactly on a center
+from repro.engine.backend import (_D2_FLOOR, BackendLike, fcm_sweep,
+                                  hard_assign, membership_terms,
+                                  pairwise_sqdist, soft_assign)
+from repro.engine.merge import fcm_converge
 
-
-class FCMState(NamedTuple):
-    centers: jax.Array        # (C, d) current centers
-    prev_centers: jax.Array   # (C, d) centers of the previous sweep
-    n_iter: jax.Array         # () int32
-    objective: jax.Array      # () f32 — paper Eq. (1)/(2) at last sweep
+__all__ = [
+    "FCMResult", "fcm", "wfcm", "fcm_sweep", "membership_terms",
+    "pairwise_sqdist", "soft_assign", "hard_assign", "_D2_FLOOR",
+]
 
 
 class FCMResult(NamedTuple):
@@ -34,53 +37,6 @@ class FCMResult(NamedTuple):
     center_weights: jax.Array  # (C,)  Σ_k w_k·u_ik^m  (paper Eq. 6 W_final)
     n_iter: jax.Array          # () iterations to convergence
     objective: jax.Array       # () final objective value
-
-
-def membership_terms(x: jax.Array, centers: jax.Array, m: float) -> jax.Array:
-    """u_ik^m for every record/center pair.  x: (N,d), centers: (C,d) → (N,C).
-
-    Paper Eq. (5): numerator_i = ‖x−v_i‖^(2/(m−1)),
-    denominator = Σ_i 1/numerator_i,  u_i^m = (numerator_i · denominator)^(−m).
-    The denominator is computed once per record — this is the O(n·c) trick
-    (naive FCM is O(n·c²) because the inner normalizing sum is re-evaluated
-    per (i,k) pair).
-    """
-    d2 = pairwise_sqdist(x, centers)
-    return _um_from_d2(d2, m)
-
-
-def _um_from_d2(d2: jax.Array, m: float) -> jax.Array:
-    """Numerically-stable u^m: the Eq.-5 ratio computed in log space with
-    max-normalization (u_i = r_i/Σr_j, r_i = (d_min/d_i)^(1/(m−1)) ≤ 1),
-    avoiding the d^(2/(m−1)) overflow/underflow for m near 1."""
-    expo = 1.0 / (m - 1.0)
-    logd = jnp.log(d2)
-    lmin = jnp.min(logd, axis=-1, keepdims=True)
-    r = jnp.exp(-expo * (logd - lmin))              # (N, C), in (0, 1]
-    u = r / jnp.sum(r, axis=-1, keepdims=True)
-    return jnp.power(u, m)                          # u^m, (N, C)
-
-
-def pairwise_sqdist(x: jax.Array, centers: jax.Array) -> jax.Array:
-    """‖x−v‖² via the MXU-friendly expansion x² + v² − 2·x·vᵀ."""
-    x = x.astype(jnp.float32)
-    centers = centers.astype(jnp.float32)
-    x2 = jnp.sum(x * x, axis=-1, keepdims=True)          # (N, 1)
-    v2 = jnp.sum(centers * centers, axis=-1)             # (C,)
-    cross = x @ centers.T                                # (N, C) — matmul
-    return jnp.maximum(x2 + v2 - 2.0 * cross, _D2_FLOOR)
-
-
-def fcm_sweep(x, weights, centers, m):
-    """One full accumulation sweep (Alg. 1 body).  Returns (V_new, W, Q)."""
-    um = membership_terms(x, centers, m)            # (N, C)
-    wum = um * weights[:, None]                     # w_k · u_ik^m
-    w_i = jnp.sum(wum, axis=0)                      # (C,)
-    v_num = wum.T @ x.astype(jnp.float32)           # (C, d) — matmul
-    d2 = pairwise_sqdist(x, centers)
-    q = jnp.sum(wum * d2)                           # objective, Eq. (2)
-    v_new = v_num / jnp.maximum(w_i, _D2_FLOOR)[:, None]
-    return v_new, w_i, q
 
 
 def fcm(
@@ -91,49 +47,19 @@ def fcm(
     eps: float = 1e-6,
     max_iter: int = 1000,
     point_weights: Optional[jax.Array] = None,
-    sweep_fn=None,
+    backend: BackendLike = None,
 ) -> FCMResult:
     """Run (weighted) FCM to convergence inside one XLA while_loop.
 
-    Stopping rule is the paper's:  max_i ‖V_i,new − V_i,old‖² ≤ ε, capped at
-    ``max_iter`` sweeps.  ``sweep_fn`` lets the Pallas kernel path
-    (`repro.kernels.ops.fcm_sweep_kernel`) replace the jnp sweep.
+    Stopping rule is the paper's:  max_i ‖V_i,new − V_i,old‖² ≤ ε, capped
+    at ``max_iter`` sweeps.  ``backend`` selects the sweep implementation
+    (a name like ``"jnp"``/``"pallas"``, a `repro.engine.SweepBackend`,
+    or None/"auto" for the platform default).
     """
-    x = jnp.asarray(x)
-    n = x.shape[0]
-    w = (jnp.ones((n,), jnp.float32) if point_weights is None
-         else jnp.asarray(point_weights, jnp.float32))
-    v0 = jnp.asarray(init_centers, jnp.float32)
-    sweep = sweep_fn or fcm_sweep
-
-    def cond(state: FCMState):
-        delta = jnp.max(jnp.sum(
-            (state.centers - state.prev_centers) ** 2, axis=-1))
-        return jnp.logical_and(state.n_iter < max_iter,
-                               jnp.logical_or(state.n_iter == 0, delta > eps))
-
-    def body(state: FCMState):
-        v_new, _, q = sweep(x, w, state.centers, m)
-        return FCMState(v_new, state.centers, state.n_iter + 1, q)
-
-    init = FCMState(v0, v0, jnp.int32(0), jnp.float32(jnp.inf))
-    final = jax.lax.while_loop(cond, body, init)
-    # Eq. (6): final per-center mass (used as the weight downstream).
-    _, w_final, q = sweep(x, w, final.centers, m)
-    return FCMResult(final.centers, w_final, final.n_iter, q)
+    res = fcm_converge(x, init_centers, m=m, eps=eps, max_iter=max_iter,
+                       point_weights=point_weights, backend=backend)
+    return FCMResult(res.summary.centers, res.summary.masses,
+                     res.n_iter, res.objective)
 
 
 wfcm = functools.partial(fcm)  # WFCM == FCM with point_weights (paper Eq. 2)
-
-
-def soft_assign(x: jax.Array, centers: jax.Array, m: float = 2.0) -> jax.Array:
-    """Membership degrees u_ik (not raised to m) — for evaluation."""
-    d2 = pairwise_sqdist(x, centers)
-    expo = 1.0 / (m - 1.0)
-    num = jnp.power(d2, expo)
-    den = jnp.sum(1.0 / num, axis=-1, keepdims=True)
-    return 1.0 / (num * den)
-
-
-def hard_assign(x: jax.Array, centers: jax.Array) -> jax.Array:
-    return jnp.argmin(pairwise_sqdist(x, centers), axis=-1)

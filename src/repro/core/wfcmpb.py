@@ -2,10 +2,12 @@
 
 Data is split into S blocks (block size from the Parker–Hall sampling
 formula).  Block i is clustered with FCM seeded by the previous block's
-centers; its (centers, weights) are merged into the running summary with
-a weighted FCM.  The running summary is a FIXED-size (C centers, C
-weights) sketch, so the whole progression is a `lax.scan` — one XLA
-program, O(C·d) state, exactly the paper's single-pass property.
+centers; its (centers, weights) summary is merged into the running
+summary through the engine's ``flat`` merge plan — the same weighted
+merge the BigFCM reducer and the streaming window use.  The running
+summary is a FIXED-size (C centers, C weights) sketch, so the whole
+progression is a `lax.scan` — one XLA program, O(C·d) state, exactly
+the paper's single-pass property.
 """
 from __future__ import annotations
 
@@ -13,6 +15,8 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.engine import MergePlan, Summary, merge_summaries, resolve_backend
 
 from .fcm import FCMResult, fcm
 
@@ -27,13 +31,14 @@ def wfcmpb(
     block_size: int = 4096,
     point_weights: Optional[jax.Array] = None,
     merge_max_iter: int = 200,
-    sweep_fn=None,
+    backend=None,
 ) -> FCMResult:
     """Cluster ``x`` block-progressively.  x: (N, d) → FCMResult.
 
     N is padded up to a multiple of block_size with zero-weight phantom
     records (weight 0 ⇒ no contribution to any accumulation).
     """
+    be = resolve_backend(backend)
     x = jnp.asarray(x, jnp.float32)
     n, d = x.shape
     c = init_centers.shape[0]
@@ -49,30 +54,26 @@ def wfcmpb(
     wb = w.reshape(n_blocks, block_size)
 
     v0 = jnp.asarray(init_centers, jnp.float32)
+    plan = MergePlan("flat", m=m, eps=eps, max_iter=merge_max_iter)
 
     def step(carry, blk):
-        v_prev, v_sum, w_sum, it_total = carry
+        v_prev, running, it_total = carry
         bx, bw = blk
         # C_i, W_i = FCM(S_i, C_{i−1})  — seed with previous block's centers.
         res = fcm(bx, v_prev, m=m, eps=eps, max_iter=max_iter,
-                  point_weights=bw, sweep_fn=sweep_fn)
-        # V_final, W_f = WFCM(V_final ∪ C_i, W_f ∪ W_i)
-        pts = jnp.concatenate([v_sum, res.centers], axis=0)        # (2C, d)
-        wts = jnp.concatenate([w_sum, res.center_weights], axis=0)  # (2C,)
-        merged = fcm(pts, res.centers, m=m, eps=eps,
-                     max_iter=merge_max_iter, point_weights=wts,
-                     sweep_fn=sweep_fn)
-        carry = (res.centers, merged.centers, merged.center_weights,
-                 it_total + res.n_iter)
+                  point_weights=bw, backend=be)
+        # V_final, W_f = WFCM(V_final ∪ C_i, W_f ∪ W_i) — one flat merge
+        # of the running summary with the block summary, seeded with C_i.
+        block_sum = Summary(res.centers, res.center_weights)
+        merged = merge_summaries([running, block_sum], plan, backend=be,
+                                 init=res.centers)
+        carry = (res.centers, merged.summary, it_total + res.n_iter)
         return carry, res.objective
 
-    # Zero-weight init summary: phantom centers are ignored by WFCM.
-    init = (v0, v0, jnp.zeros((c,), jnp.float32), jnp.int32(0))
-    (v_last, v_final, w_final, iters), _ = jax.lax.scan(
-        step, init, (xb, wb))
-    del v_last
-    # Objective of the final sketch against the full (padded) data:
-    from .fcm import fcm_sweep, membership_terms, pairwise_sqdist  # noqa
-    um = membership_terms(x, v_final, m) * w[:, None]
-    q = jnp.sum(um * pairwise_sqdist(x, v_final))
-    return FCMResult(v_final, w_final, iters, q)
+    # Zero-mass init summary: phantom centers are ignored by the merge.
+    init = (v0, Summary(v0, jnp.zeros((c,), jnp.float32)), jnp.int32(0))
+    (_, final, iters), _ = jax.lax.scan(step, init, (xb, wb))
+    # Objective of the final sketch against the full (padded) data —
+    # the accumulate entry's q output (Σ w·u^m·d²), through the backend.
+    _, _, q = be.accumulate(x, w, final.centers, m)
+    return FCMResult(final.centers, final.masses, iters, q)

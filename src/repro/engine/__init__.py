@@ -1,0 +1,37 @@
+"""`repro.engine` — the sweep-backend and merge-plan core (PR 3).
+
+One layer owns the paper's two primitives and every policy knob around
+them:
+
+  * **backends** (`backend`) — implementations of the O(n·c)
+    accumulation sweep, selected by name (``jnp`` / ``pallas`` /
+    ``pallas_accumulate``) or platform (``"auto"``), instead of
+    hand-threaded sweep callables;
+  * **summaries** (`summary`) — the (centers, masses) sketch every
+    layer trades in;
+  * **merge plans** (`merge`) — the weighted summary-reduce in its
+    three topologies (``flat`` / ``pairwise`` / ``windowed``), plus the
+    shared convergence loop `fcm_converge`.
+
+Batch BigFCM, WFCMPB, the streaming window, and the serve path are all
+thin consumers of this module.
+"""
+from .backend import (JnpBackend, SweepBackend, available_backends,
+                      default_backend_name, fcm_accumulate, fcm_sweep,
+                      get_backend, hard_assign, membership_terms,
+                      normalize_accumulators, pairwise_sqdist,
+                      register_backend, resolve_backend, soft_assign)
+from .merge import (TOPOLOGIES, MergePlan, MergeResult, fcm_converge,
+                    merge_summaries)
+from .summary import (Summary, phantom, slot_masses, stack, summary,
+                      total_mass)
+
+__all__ = [
+    "JnpBackend", "SweepBackend", "available_backends",
+    "default_backend_name", "fcm_accumulate", "fcm_sweep", "get_backend",
+    "hard_assign", "membership_terms", "normalize_accumulators",
+    "pairwise_sqdist", "register_backend", "resolve_backend",
+    "soft_assign", "TOPOLOGIES", "MergePlan", "MergeResult",
+    "fcm_converge", "merge_summaries", "Summary", "phantom",
+    "slot_masses", "stack", "summary", "total_mass",
+]

@@ -1,0 +1,226 @@
+"""Sweep backends — the one place the Kolen–Hutcheson sweep is chosen.
+
+The paper's entire speed claim reduces to one primitive, the O(n·c)
+accumulation sweep (Alg. 1 body): recompute the membership term u_ik^m on
+the fly and accumulate ``V_i += w_k·u_ik^m·x_k``, ``W_i += w_k·u_ik^m``.
+Every layer (driver race, combiner, reducer, WFCMPB blocks, streaming
+window) runs this same primitive; a *backend* is an implementation of it,
+selected once by name instead of hand-threaded callables:
+
+  ``jnp``               — pure-jnp reference (XLA fuses it well on CPU).
+  ``pallas``            — fused Pallas TPU kernel (interpret mode on CPU,
+                          kept registered there for parity testing).
+  ``pallas_accumulate`` — the raw-accumulator Pallas entry point
+                          (`fcm_accumulate_pallas`): emits un-normalized
+                          (v_num, w_i, q) sums, so chunks/slots/shards
+                          add elementwise and normalize ONCE — the
+                          streaming/merge-fusion backend.
+
+``resolve_backend(None | "auto")`` picks by platform: TPU → ``pallas``,
+anything else → ``jnp`` (the kernel's accumulation scheme is a Mosaic
+semantic; on CPU the pallas paths stay available in interpret mode for
+parity).  The Pallas backends register themselves from
+`repro.kernels.ops` on first lookup, so this module has no hard kernel
+dependency.
+
+The sweep math itself (pairwise distances, log-space membership terms)
+lives here — it is the engine's foundation; `repro.core.fcm` re-exports
+it for the paper-facing API.
+"""
+from __future__ import annotations
+
+from typing import Dict, Union
+
+import jax
+import jax.numpy as jnp
+
+_D2_FLOOR = 1e-12  # distance floor: a record sitting exactly on a center
+
+
+# ------------------------------------------------------------ sweep math ---
+
+def pairwise_sqdist(x: jax.Array, centers: jax.Array) -> jax.Array:
+    """‖x−v‖² via the MXU-friendly expansion x² + v² − 2·x·vᵀ."""
+    x = x.astype(jnp.float32)
+    centers = centers.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)          # (N, 1)
+    v2 = jnp.sum(centers * centers, axis=-1)             # (C,)
+    cross = x @ centers.T                                # (N, C) — matmul
+    return jnp.maximum(x2 + v2 - 2.0 * cross, _D2_FLOOR)
+
+
+def _u_from_d2(d2: jax.Array, m: float) -> jax.Array:
+    """Numerically-stable membership degrees u: the Eq.-5 ratio computed
+    in log space with max-normalization (u_i = r_i/Σr_j,
+    r_i = (d_min/d_i)^(1/(m−1)) ≤ 1), avoiding the d^(2/(m−1))
+    overflow/underflow for m near 1."""
+    expo = 1.0 / (m - 1.0)
+    logd = jnp.log(d2)
+    lmin = jnp.min(logd, axis=-1, keepdims=True)
+    r = jnp.exp(-expo * (logd - lmin))              # (N, C), in (0, 1]
+    return r / jnp.sum(r, axis=-1, keepdims=True)
+
+
+def _um_from_d2(d2: jax.Array, m: float) -> jax.Array:
+    """u^m — the membership *term* the sweep accumulates."""
+    return jnp.power(_u_from_d2(d2, m), m)          # u^m, (N, C)
+
+
+def membership_terms(x: jax.Array, centers: jax.Array, m: float) -> jax.Array:
+    """u_ik^m for every record/center pair.  x: (N,d), centers: (C,d) → (N,C).
+
+    Paper Eq. (5): numerator_i = ‖x−v_i‖^(2/(m−1)),
+    denominator = Σ_i 1/numerator_i,  u_i^m = (numerator_i · denominator)^(−m).
+    The denominator is computed once per record — this is the O(n·c) trick
+    (naive FCM is O(n·c²) because the inner normalizing sum is re-evaluated
+    per (i,k) pair).
+    """
+    return _um_from_d2(pairwise_sqdist(x, centers), m)
+
+
+def fcm_accumulate(x, weights, centers, m):
+    """Raw Alg.-1 accumulators (v_num, w_i, q) — normalization deferred.
+
+    All three outputs are plain sums over records, so partial results
+    from chunks/slots/shards add elementwise (and `jax.lax.psum`) before
+    a single normalization — the property every merge topology exploits.
+    """
+    d2 = pairwise_sqdist(x, centers)
+    wum = _um_from_d2(d2, m) * weights[:, None]     # w_k · u_ik^m
+    w_i = jnp.sum(wum, axis=0)                      # (C,)
+    v_num = wum.T @ x.astype(jnp.float32)           # (C, d) — matmul
+    q = jnp.sum(wum * d2)                           # objective, Eq. (2)
+    return v_num, w_i, q
+
+
+def normalize_accumulators(v_num, w_i, q):
+    """The one deferred normalization: (v_num, w_i, q) → (v_new, w_i, q)."""
+    return v_num / jnp.maximum(w_i, _D2_FLOOR)[:, None], w_i, q
+
+
+def fcm_sweep(x, weights, centers, m):
+    """One full accumulation sweep (Alg. 1 body).  Returns (V_new, W, Q)."""
+    return normalize_accumulators(*fcm_accumulate(x, weights, centers, m))
+
+
+def soft_assign(x: jax.Array, centers: jax.Array, m: float = 2.0) -> jax.Array:
+    """Membership degrees u_ik (not raised to m) — for evaluation/serving.
+
+    The naive ``d2**(1/(m−1))`` ratio overflows to inf (and its
+    reciprocal underflows to 0) for m near 1, poisoning every row that
+    contains a moderately distant center; this shares `_u_from_d2`, the
+    log-space form the sweep itself accumulates (to the power m).
+    """
+    return _u_from_d2(pairwise_sqdist(x, centers), m)
+
+
+def hard_assign(x: jax.Array, centers: jax.Array) -> jax.Array:
+    return jnp.argmin(pairwise_sqdist(x, centers), axis=-1)
+
+
+# -------------------------------------------------------------- backends ---
+
+class SweepBackend:
+    """One implementation of the accumulation sweep.
+
+    Subclasses provide ``accumulate`` (raw sums) and may override
+    ``sweep`` with a fused version; assignment helpers default to the
+    shared jnp math (distance+argmin/ratio is VPU-trivial) but remain
+    overridable so a backend can own the full serve path too.
+    """
+
+    name: str = "?"
+
+    def accumulate(self, x, w, centers, m):
+        """Raw (v_num, w_i, q) accumulators for one record chunk."""
+        raise NotImplementedError
+
+    def sweep(self, x, w, centers, m):
+        """(v_new, w_i, q): accumulate + the one deferred normalization."""
+        return normalize_accumulators(*self.accumulate(x, w, centers, m))
+
+    def soft_assign(self, x, centers, m=2.0):
+        return soft_assign(x, centers, m)
+
+    def hard_assign(self, x, centers):
+        return hard_assign(x, centers)
+
+    def __repr__(self):
+        return f"<SweepBackend {self.name}>"
+
+
+class JnpBackend(SweepBackend):
+    """Pure-jnp reference backend — the CPU default and the oracle."""
+
+    name = "jnp"
+
+    def accumulate(self, x, w, centers, m):
+        return fcm_accumulate(x, w, centers, m)
+
+    def sweep(self, x, w, centers, m):
+        return fcm_sweep(x, w, centers, m)
+
+
+_REGISTRY: Dict[str, SweepBackend] = {}
+_KERNELS_PROBED = False
+
+BackendLike = Union[None, str, SweepBackend]
+
+
+def register_backend(backend: SweepBackend) -> SweepBackend:
+    """Register (or replace) a backend under ``backend.name``."""
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def _probe_kernel_backends() -> None:
+    """Import `repro.kernels.ops` once so its backends self-register."""
+    global _KERNELS_PROBED
+    if _KERNELS_PROBED:
+        return
+    _KERNELS_PROBED = True
+    try:
+        import repro.kernels.ops  # noqa: F401 — registers pallas backends
+    except Exception:  # kernels layer absent OR broken (pallas API skew
+        pass           # raises beyond ImportError): jnp still works
+
+
+def available_backends() -> list:
+    _probe_kernel_backends()
+    return sorted(_REGISTRY)
+
+
+def get_backend(name: str) -> SweepBackend:
+    _probe_kernel_backends()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown sweep backend {name!r}; registered: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+def default_backend_name() -> str:
+    """The platform auto-selection rule: TPU → ``pallas``, anything else
+    → ``jnp``.  The Pallas kernel's revisited-output-block accumulation
+    is a Mosaic (TPU) semantic, so GPU hosts get the jnp reference too;
+    on CPU the pallas backends stay registered in interpret mode for
+    parity testing.  A TPU host whose kernels layer failed to import
+    degrades to ``jnp`` (slow but correct) rather than KeyError-ing."""
+    if jax.default_backend() == "tpu":
+        _probe_kernel_backends()
+        if "pallas" in _REGISTRY:
+            return "pallas"
+    return "jnp"
+
+
+def resolve_backend(spec: BackendLike = None) -> SweepBackend:
+    """None/"auto" → platform default; str → registry; object → itself."""
+    if isinstance(spec, SweepBackend):
+        return spec
+    if spec is None or spec == "auto":
+        return get_backend(default_backend_name())
+    return get_backend(spec)
+
+
+register_backend(JnpBackend())

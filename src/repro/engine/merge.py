@@ -1,0 +1,207 @@
+"""Merge plans — every summary-reduce in the system, as one primitive.
+
+The repo previously grew three hand-rolled copies of the same weighted
+merge: BigFCM's reducer (all-gather + WFCM over P·C sketch points),
+WFCMPB's progressive scan (running summary ∪ block summary), and the
+streaming window's pairwise tree.  All three are "run a weighted FCM
+over a stack of (centers, masses) summaries" with a *topology* choice,
+so that is the whole vocabulary here:
+
+  ``flat``      — one WFCM over all S·C sketch points (the paper's
+                  single reduce job; also each WFCMPB scan step).
+  ``pairwise``  — balanced tree of 2-slot flat merges (log₂ S WFCM
+                  rounds; the shape that scales when slots live on
+                  different hosts).
+  ``windowed``  — ONE WFCM whose every iteration accumulates the raw
+                  per-slot (v_num, w_i, q) sums through the backend's
+                  ``accumulate`` entry point (`fcm_accumulate_pallas` on
+                  the Pallas backends) and normalizes once — the
+                  pairwise tree's multiple WFCM rounds fused into
+                  in-kernel accumulation.  Raw accumulators are plain
+                  record sums, so per-slot partials also `psum` across
+                  hosts without gathering centers.
+
+**Mass is NOT conserved by WFCM**: Σ_i u_ik^m < 1 for m > 1, so every
+merge round shrinks total mass and different topologies legitimately
+disagree on the merged masses (``pairwise`` runs more rounds than
+``flat``/``windowed``).  Compare merged *centers* and objectives across
+topologies — never total mass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from .backend import BackendLike, normalize_accumulators, resolve_backend
+from .summary import Summary, slot_masses
+from .summary import stack as stack_summaries
+
+TOPOLOGIES = ("flat", "pairwise", "windowed")
+
+
+@dataclasses.dataclass(frozen=True)
+class MergePlan:
+    """How (and how hard) to collapse a summary stack into one summary."""
+    topology: str = "flat"     # one of TOPOLOGIES
+    seed: str = "heaviest"     # "heaviest" | "first" — reducer WFCM seeds
+    m: float = 2.0
+    eps: float = 5e-11         # paper reducer ε
+    max_iter: int = 200
+
+    def __post_init__(self):
+        if self.topology not in TOPOLOGIES:
+            raise ValueError(f"unknown merge topology {self.topology!r}; "
+                             f"one of {TOPOLOGIES}")
+        if self.seed not in ("heaviest", "first"):
+            raise ValueError(f"unknown seed rule {self.seed!r}")
+
+
+class MergeResult(NamedTuple):
+    summary: Summary          # merged (C, d) centers + (C,) masses
+    n_iter: jax.Array         # () i32 — total WFCM sweeps across rounds
+    objective: jax.Array      # () f32 — Eq. (2) of the last round
+
+
+def _converge(sweep, v0, *, eps: float, max_iter: int):
+    """The paper's stopping rule, shared by every consumer: iterate
+    ``sweep: centers → (v_new, w_i, q)`` until max_i ‖ΔV_i‖² ≤ ε (capped
+    at ``max_iter``), then one more sweep for the final masses (Eq. 6)."""
+    def cond(state):
+        v, v_prev, n_iter, _ = state
+        delta = jnp.max(jnp.sum((v - v_prev) ** 2, axis=-1))
+        return jnp.logical_and(n_iter < max_iter,
+                               jnp.logical_or(n_iter == 0, delta > eps))
+
+    def body(state):
+        v, _, n_iter, _ = state
+        v_new, _, q = sweep(v)
+        return (v_new, v, n_iter + 1, q)
+
+    v0 = jnp.asarray(v0, jnp.float32)
+    init = (v0, v0, jnp.int32(0), jnp.float32(jnp.inf))
+    v, _, n_iter, _ = jax.lax.while_loop(cond, body, init)
+    _, w_final, q = sweep(v)
+    return MergeResult(Summary(v, w_final), n_iter, q)
+
+
+def fcm_converge(
+    x: jax.Array,
+    init_centers: jax.Array,
+    *,
+    m: float = 2.0,
+    eps: float = 1e-6,
+    max_iter: int = 1000,
+    point_weights: Optional[jax.Array] = None,
+    backend: BackendLike = None,
+) -> MergeResult:
+    """Run (weighted) FCM over records to convergence — ONE XLA while_loop
+    through the resolved backend's sweep.  The core of `repro.core.fcm`."""
+    be = resolve_backend(backend)
+    x = jnp.asarray(x)
+    w = (jnp.ones((x.shape[0],), jnp.float32) if point_weights is None
+         else jnp.asarray(point_weights, jnp.float32))
+    return _converge(lambda v: be.sweep(x, w, v, m), init_centers,
+                     eps=eps, max_iter=max_iter)
+
+
+def _seed_centers(s: Summary, rule: str) -> jax.Array:
+    if rule == "first":
+        # Paper line 13: seed the reducer WFCM with V_1, the first
+        # combiner's centers.
+        return s.centers[0]
+    return s.centers[jnp.argmax(slot_masses(s))]
+
+
+def _merge_flat(s: Summary, plan: MergePlan, be, init) -> MergeResult:
+    pts = s.centers.reshape(-1, s.centers.shape[-1])
+    wts = s.masses.reshape(-1)
+    v0 = _seed_centers(s, plan.seed) if init is None else init
+    return _converge(lambda v: be.sweep(pts, wts, v, plan.m), v0,
+                     eps=plan.eps, max_iter=plan.max_iter)
+
+
+def _merge_windowed(s: Summary, plan: MergePlan, be, init) -> MergeResult:
+    n_slots = s.centers.shape[0]
+
+    def sweep(v):
+        v_num, w_i, q = be.accumulate(s.centers[0], s.masses[0], v, plan.m)
+        for i in range(1, n_slots):    # static unroll: one kernel per slot
+            vn, wi, qi = be.accumulate(s.centers[i], s.masses[i], v, plan.m)
+            v_num, w_i, q = v_num + vn, w_i + wi, q + qi
+        return normalize_accumulators(v_num, w_i, q)
+
+    v0 = _seed_centers(s, plan.seed) if init is None else init
+    return _converge(sweep, v0, eps=plan.eps, max_iter=plan.max_iter)
+
+
+def _merge_pairwise(s: Summary, plan: MergePlan, be) -> MergeResult:
+    level = [Summary(s.centers[i], s.masses[i])
+             for i in range(s.centers.shape[0])]
+    n_iter = jnp.int32(0)
+    q = jnp.float32(0)
+    while len(level) > 1:
+        nxt = []
+        for i in range(0, len(level) - 1, 2):
+            a, b = level[i], level[i + 1]
+            # seed each pair with the heavier slot's centers
+            v0 = jnp.where(jnp.sum(a.masses) >= jnp.sum(b.masses),
+                           a.centers, b.centers)
+            res = _merge_flat(stack_summaries([a, b]), plan, be, v0)
+            n_iter = n_iter + res.n_iter
+            q = res.objective
+            nxt.append(res.summary)
+        if len(level) % 2:
+            nxt.append(level[-1])
+        level = nxt
+    return MergeResult(level[0], n_iter, q)
+
+
+def merge_summaries(
+    summaries: Union[Summary, Sequence[Summary]],
+    plan: Optional[MergePlan] = None,
+    *,
+    backend: BackendLike = None,
+    init: Optional[jax.Array] = None,
+) -> MergeResult:
+    """Collapse a stack of (centers, masses) summaries into one.
+
+    ``summaries`` is a `Summary` with a leading slot axis — (S, C, d)
+    centers, (S, C) masses — or a sequence of single summaries (stacked
+    here).  ``init`` overrides the plan's seed rule with explicit
+    reducer-WFCM seed centers (e.g. the paper's V_1, or the previous
+    level of a hierarchical reduce); it applies to the single-WFCM
+    topologies only — ``pairwise`` seeds every pair with the heavier
+    slot's centers, so passing ``init`` with it is an error rather than
+    a silent no-op.  Phantom (zero-mass) slots vanish by construction
+    in every topology.
+
+    NOTE: merged *masses* depend on the topology — WFCM does not
+    conserve mass (Σ_i u^m < 1 for m > 1; see module docstring).
+    """
+    if not isinstance(summaries, Summary):
+        summaries = stack_summaries(list(summaries))
+    if summaries.centers.ndim != 3:
+        raise ValueError("merge_summaries expects stacked (S, C, d) "
+                         f"summaries, got centers {summaries.centers.shape}")
+    plan = plan or MergePlan()
+    be = resolve_backend(backend)
+    if summaries.centers.shape[0] == 1 and init is None:
+        # A lone slot with no explicit seed merges to itself.  With
+        # ``init`` given, fall through: the reducer WFCM still runs as a
+        # polish of the single summary from the supplied seed (the
+        # 1-device-mesh degenerate reduce).
+        return MergeResult(Summary(summaries.centers[0],
+                                   summaries.masses[0]),
+                           jnp.int32(0), jnp.float32(0))
+    if plan.topology == "flat":
+        return _merge_flat(summaries, plan, be, init)
+    if plan.topology == "windowed":
+        return _merge_windowed(summaries, plan, be, init)
+    if init is not None:
+        raise ValueError("init= does not apply to the pairwise topology "
+                         "(each pair seeds with its heavier slot); use a "
+                         "flat/windowed plan for an explicit seed")
+    return _merge_pairwise(summaries, plan, be)

@@ -1,0 +1,58 @@
+"""The (centers, masses) summary — the one currency every layer trades in.
+
+BigFCM's scalability story rests on a single observation: once a chunk of
+records has been clustered locally, everything downstream needs only the
+C centers and their accumulated fuzzy masses Σ_k w_k·u_ik^m — a few KB
+regardless of how many records produced them.  The paper's reducer merges
+combiner summaries; WFCMPB's scan merges block summaries; the streaming
+window merges time-slot summaries.  All three are *stacks of summaries*
+fed to a weighted merge, so the stack is the canonical shape here:
+``centers`` (S, C, d) with ``masses`` (S, C), where S is the number of
+slots (devices, blocks, or window positions).
+
+A slot with all-zero masses is a **phantom**: its points carry weight 0
+and vanish from every accumulation, so "empty" ring-buffer slots or
+padded gather positions need no masking anywhere downstream.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class Summary(NamedTuple):
+    """A weighted center sketch (or a stack of them on a leading axis)."""
+    centers: jax.Array   # (..., C, d) float32
+    masses: jax.Array    # (..., C)    float32 — Σ_k w_k·u_ik^m per center
+
+
+def summary(centers, masses) -> Summary:
+    """Build a Summary coercing both leaves to float32."""
+    return Summary(jnp.asarray(centers, jnp.float32),
+                   jnp.asarray(masses, jnp.float32))
+
+
+def stack(summaries: Sequence[Summary]) -> Summary:
+    """Stack single summaries into the canonical (S, C, d)/(S, C) form."""
+    return Summary(jnp.stack([s.centers for s in summaries]),
+                   jnp.stack([s.masses for s in summaries]))
+
+
+def phantom(n_clusters: int, d: int, *, slots: int = 0) -> Summary:
+    """All-zero summary (or ``slots`` of them): contributes nothing to any
+    merge — the reset/init value for ring buffers and scan carries."""
+    shape = (slots,) if slots else ()
+    return Summary(jnp.zeros(shape + (n_clusters, d), jnp.float32),
+                   jnp.zeros(shape + (n_clusters,), jnp.float32))
+
+
+def total_mass(s: Summary) -> jax.Array:
+    """Total (possibly decayed) record mass held by the summary."""
+    return jnp.sum(s.masses)
+
+
+def slot_masses(s: Summary) -> jax.Array:
+    """Per-slot total mass of a stacked summary — (S,)."""
+    return jnp.sum(s.masses, axis=-1)

@@ -1,16 +1,22 @@
-"""jit'd public wrappers for the Pallas kernels.
+"""jit'd public wrappers for the Pallas kernels + backend registration.
 
-``fcm_sweep_kernel`` is drop-in compatible with ``repro.core.fcm.fcm_sweep``
-(pass it as ``sweep_fn=``).  ``fcm_accumulate_kernel`` exposes the raw
-(un-normalized) accumulators for streaming, and ``accumulate_chunks``
-folds a chunk stream through it — one normalization at the end, exactly
-equal to a single sweep over the concatenated records.  On CPU the
-kernel body runs in interpret mode; on TPU it lowers to Mosaic.
+This module is where the kernel layer plugs into `repro.engine`: importing
+it registers the ``pallas`` (fused sweep) and ``pallas_accumulate`` (raw
+accumulators, normalization deferred across chunks/slots) backends, which
+is how every consumer reaches the kernels — through
+``engine.resolve_backend``, never by importing sweeps ad hoc.
+``accumulate_chunks`` folds a chunk stream through the raw entry point —
+one normalization at the end, exactly equal to a single sweep over the
+concatenated records.  On CPU the kernel body runs in interpret mode; on
+TPU it lowers to Mosaic.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.engine.backend import (SweepBackend, normalize_accumulators,
+                                  register_backend)
 
 from .fcm_update import _D2_FLOOR, fcm_accumulate_pallas, fcm_sweep_pallas
 
@@ -20,6 +26,7 @@ def _on_cpu() -> bool:
 
 
 def fcm_sweep_kernel(x, w, centers, m: float = 2.0, *, tile_n: int = 1024):
+    """Fused Pallas sweep — drop-in for the jnp `engine.fcm_sweep`."""
     return fcm_sweep_pallas(x, w, centers, m, tile_n=tile_n,
                             interpret=_on_cpu())
 
@@ -40,7 +47,7 @@ def accumulate_chunks(chunks, weights, centers, m: float = 2.0, *,
     accumulators; they sum elementwise across chunks (every output is a
     plain record sum) and normalize once — matching a single sweep over
     the concatenation up to float32 summation order.  Returns
-    (v_new, w_i, q) like ``fcm_sweep``.
+    (v_new, w_i, q) like the engine sweep.
     """
     acc = accumulate_fn or fcm_accumulate_kernel
     v_num, w_i, q = None, None, None
@@ -54,3 +61,41 @@ def accumulate_chunks(chunks, weights, centers, m: float = 2.0, *,
         raise ValueError("accumulate_chunks: empty chunk stream")
     v_new = v_num / jnp.maximum(w_i, _D2_FLOOR)[:, None]
     return v_new, w_i, q
+
+
+# --------------------------------------------------- engine registration ---
+
+class PallasBackend(SweepBackend):
+    """Fused Pallas TPU sweep (interpret mode on CPU, for parity)."""
+
+    name = "pallas"
+
+    def accumulate(self, x, w, centers, m):
+        return fcm_accumulate_kernel(x, w, centers, m)
+
+    def sweep(self, x, w, centers, m):
+        return fcm_sweep_kernel(x, w, centers, m)
+
+
+class PallasAccumulateBackend(SweepBackend):
+    """Raw-accumulator Pallas entry (`fcm_accumulate_pallas`): chunks,
+    window slots, and shards sum their (v_num, w_i, q) partials and
+    normalize ONCE — the streaming / fused-window-merge backend.
+
+    Same kernel as `PallasBackend` — the two differ in *entry point*,
+    not math: this one's sweep routes through the public accumulate
+    wrapper + an out-of-kernel normalization, so a whole-sweep consumer
+    and a chunked-accumulate consumer are bit-identical per chunk."""
+
+    name = "pallas_accumulate"
+
+    def accumulate(self, x, w, centers, m):
+        return fcm_accumulate_kernel(x, w, centers, m)
+
+    def sweep(self, x, w, centers, m):
+        return normalize_accumulators(
+            *fcm_accumulate_kernel(x, w, centers, m))
+
+
+register_backend(PallasBackend())
+register_backend(PallasAccumulateBackend())

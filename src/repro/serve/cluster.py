@@ -7,7 +7,10 @@ freshest windowed centers — the serve path and the learn path share one
 model, so drift-triggered re-seeds show up in the very next response.
 
 `make_assigner` freezes the current centers into a jitted scorer for
-read-only replicas (the fan-out tier: one learner, many scorers).
+read-only replicas (the fan-out tier: one learner, many scorers).  Both
+paths score through the active `repro.engine` sweep backend, so a
+replica deployed next to a TPU learner resolves the same implementation
+axis the learner uses.
 """
 from __future__ import annotations
 
@@ -17,16 +20,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fcm import hard_assign, soft_assign
+from repro.engine import resolve_backend
 
 
-def make_assigner(centers, *, m: float = 2.0, soft: bool = False):
-    """Jitted scorer against a FROZEN center snapshot (read replicas)."""
+def make_assigner(centers, *, m: float = 2.0, soft: bool = False,
+                  backend=None):
+    """Jitted scorer against a FROZEN center snapshot (read replicas).
+
+    ``backend`` names the engine sweep backend to score through
+    (None/"auto" = the platform default — the same resolution rule the
+    learner uses)."""
+    be = resolve_backend(backend)
     v = jnp.asarray(centers, jnp.float32)
     if soft:
-        return jax.jit(lambda x: soft_assign(jnp.asarray(x, jnp.float32),
-                                             v, m))
-    return jax.jit(lambda x: hard_assign(jnp.asarray(x, jnp.float32), v))
+        return jax.jit(lambda x: be.soft_assign(
+            jnp.asarray(x, jnp.float32), v, m))
+    return jax.jit(lambda x: be.hard_assign(jnp.asarray(x, jnp.float32), v))
 
 
 def assign_stream(model, source, *, soft: bool = False,
@@ -38,7 +47,8 @@ def assign_stream(model, source, *, soft: bool = False,
     (any `repro.data.stream` source).  Per chunk, yields
     ``(assignments, report)`` where ``report`` is the `IngestReport`
     when ``update=True`` (online learning while serving) and ``None``
-    when the model is frozen (scoring-only replica).
+    when the model is frozen (scoring-only replica).  Scoring runs
+    through the model's own resolved backend.
     """
     for chunk in source:
         x = np.asarray(chunk, np.float32)

@@ -1,16 +1,18 @@
 """Online/windowed BigFCM — continuous clustering over unbounded streams.
 
 See `streaming.StreamingBigFCM` for the state machine, `window` for the
-decayed sliding-window summary algebra, and `drift.DriftDetector` for
-re-seed triggering.  Stream *sources* live in `repro.data.stream`.
+decayed sliding-window ring buffer, and `drift.DriftDetector` for
+re-seed triggering.  Stream *sources* live in `repro.data.stream`; the
+window merge itself is an `repro.engine.merge_summaries` plan
+(``StreamConfig.merge_plan``).
 """
 from .drift import DriftConfig, DriftDetector
 from .streaming import (IngestReport, StreamConfig, StreamingBigFCM,
                         StreamState)
-from .window import init_window, merge_summaries, push_summary, window_mass
+from .window import init_window, push_summary, window_mass, window_summary
 
 __all__ = [
     "DriftConfig", "DriftDetector", "IngestReport", "StreamConfig",
-    "StreamingBigFCM", "StreamState", "init_window", "merge_summaries",
-    "push_summary", "window_mass",
+    "StreamingBigFCM", "StreamState", "init_window", "push_summary",
+    "window_mass", "window_summary",
 ]

@@ -12,21 +12,28 @@ this module turns it into a state machine over an unbounded stream:
        the window — the stale regime's mass is forgotten at once.
     2. **combiner** — per-batch (weighted) FCM from the current centers;
        on a device mesh each shard converges locally inside `shard_map`
-       and an in-program WFCM merges the per-device summaries (the
-       paper's reducer = hierarchy level 1: across devices).
+       and an in-program `engine.merge_summaries` flat plan merges the
+       per-device summaries (the paper's reducer = hierarchy level 1:
+       across devices).
     3. **window** — the batch summary lands in a decayed sliding window
-       (`window.push_summary`) and the window is WFCM-merged pairwise
-       (hierarchy level 2: across time) into the new global model.
+       (`window.push_summary`) and the window collapses through the
+       merge plan named by ``cfg.merge_plan`` (hierarchy level 2: across
+       time).  The default ``windowed`` plan fuses the old pairwise
+       tree's log₂ W WFCM rounds into ONE WFCM whose every iteration
+       accumulates raw per-slot sums via the backend's accumulate entry
+       point (`fcm_accumulate_pallas` on the Pallas backends) and
+       normalizes once.
 
-State is a flat pytree of small arrays (`StreamState`) so
-`ft.checkpoint.CheckpointManager` persists a live stream with the same
-atomic/async machinery as training jobs.
+The sweep implementation everywhere is ``cfg.backend`` — one engine
+config axis shared with batch BigFCM.  State is a flat pytree of small
+arrays (`StreamState`) so `ft.checkpoint.CheckpointManager` persists a
+live stream with the same atomic/async machinery as training jobs.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Iterable, NamedTuple, Optional, Sequence, Tuple
+from typing import Iterable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -35,11 +42,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.bigfcm import BigFCMConfig, run_driver
-from repro.core.fcm import fcm, fcm_sweep, hard_assign, soft_assign
+from repro.core.fcm import fcm
 from repro.core.metrics import fuzzy_objective
+from repro.engine import MergePlan, Summary, merge_summaries, resolve_backend
 from .drift import DriftConfig, DriftDetector
-from .window import (init_window, merge_summaries, push_summary,
-                     window_mass)
+from .window import init_window, push_summary, window_mass, window_summary
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,13 +59,17 @@ class StreamConfig:
     merge_max_iter: int = 200
     window: int = 8                  # sliding-window slots (mini-batches)
     decay: float = 0.9               # per-push exponential forgetting
-    hierarchical: bool = True        # pairwise-tree window merge
+    merge_plan: str = "windowed"     # window topology: windowed|pairwise|flat
     combiner_mode: str = "converge"  # "converge" | "sweep" (one-pass)
-    use_kernel: bool = False         # Pallas sweep in combiner + merges
+    backend: str = "auto"            # engine sweep backend (jnp/pallas/...)
     driver_sample: int = 512         # sample size for (re)seed driver race
     drift: DriftConfig = DriftConfig()
     reseed_cooldown: int = 3         # min batches between re-seeds
     seed: int = 0
+
+    def window_plan(self) -> MergePlan:
+        return MergePlan(self.merge_plan, m=self.m, eps=self.reducer_eps,
+                         max_iter=self.merge_max_iter)
 
 
 class StreamState(NamedTuple):
@@ -86,40 +97,35 @@ class IngestReport(NamedTuple):
     mass: float               # decayed record mass in the window
 
 
-def _sweep_fn(cfg: StreamConfig):
-    if not cfg.use_kernel:
-        return None
-    from repro.kernels.ops import fcm_sweep_kernel
-    return fcm_sweep_kernel
-
-
 def _q_norm(x, w, centers, *, m):
     """Fuzzy objective per unit record mass (the drift statistic)."""
     q = fuzzy_objective(x, centers, m, point_weights=w)
     return q / jnp.maximum(jnp.sum(w), 1e-12)
 
 
-def _combine_local(x, w, centers, *, cfg: StreamConfig, sweep):
+def _combine_local(x, w, centers, *, cfg: StreamConfig, be):
     """One batch summary: local FCM to convergence, or a single
     accumulate sweep (``combiner_mode="sweep"`` — the cheapest online
     mode, one pass per batch)."""
     if cfg.combiner_mode == "sweep":
-        v, wi, _ = (sweep or fcm_sweep)(x, w, centers, cfg.m)
+        v, wi, _ = be.sweep(x, w, centers, cfg.m)
         return v, wi, jnp.int32(1)
     res = fcm(x, centers, m=cfg.m, eps=cfg.combiner_eps,
-              max_iter=cfg.max_iter, point_weights=w, sweep_fn=sweep)
+              max_iter=cfg.max_iter, point_weights=w, backend=be)
     return res.centers, res.center_weights, res.n_iter
 
 
-def _combine_mesh_body(x_l, w_l, v, *, cfg: StreamConfig, sweep, data_axes):
-    """shard_map body: per-device combiner + in-program device reduce."""
-    c_l, w_l_c, it = _combine_local(x_l, w_l, v, cfg=cfg, sweep=sweep)
-    vg = jax.lax.all_gather(c_l, data_axes).reshape(-1, v.shape[-1])
-    wg = jax.lax.all_gather(w_l_c, data_axes).reshape(-1)
-    red = fcm(vg, v, m=cfg.m, eps=cfg.reducer_eps,
-              max_iter=cfg.merge_max_iter, point_weights=wg, sweep_fn=sweep)
+def _combine_mesh_body(x_l, w_l, v, *, cfg: StreamConfig, be, data_axes):
+    """shard_map body: per-device combiner + in-program device reduce
+    (the engine's flat plan over the gathered per-device summaries)."""
+    c_l, w_l_c, it = _combine_local(x_l, w_l, v, cfg=cfg, be=be)
+    gathered = Summary(jax.lax.all_gather(c_l, data_axes),
+                       jax.lax.all_gather(w_l_c, data_axes))
+    plan = MergePlan("flat", m=cfg.m, eps=cfg.reducer_eps,
+                     max_iter=cfg.merge_max_iter)
+    red = merge_summaries(gathered, plan, backend=be, init=v)
     its = jax.lax.all_gather(it, data_axes)
-    return red.centers, red.center_weights, its
+    return red.summary.centers, red.summary.masses, its
 
 
 class StreamingBigFCM:
@@ -132,29 +138,34 @@ class StreamingBigFCM:
         self.data_axes = tuple(data_axes)
         self.state: Optional[StreamState] = None
         self.detector = DriftDetector(cfg.drift)
-        sweep = _sweep_fn(cfg)
+        self.backend = resolve_backend(cfg.backend)
+        be = self.backend
         # Driver config for (re)seeding: the paper's FCM-vs-WFCMPB race.
         self._bcfg = BigFCMConfig(
             n_clusters=cfg.n_clusters, m=cfg.m, driver_eps=cfg.reducer_eps,
             combiner_eps=cfg.combiner_eps, reducer_eps=cfg.reducer_eps,
             max_iter=cfg.max_iter, sample_size=cfg.driver_sample,
-            use_kernel=cfg.use_kernel, seed=cfg.seed)
+            backend=cfg.backend, seed=cfg.seed)
         self._jq = jax.jit(partial(_q_norm, m=cfg.m))
         if mesh is None:
             self._jcomb = jax.jit(
-                partial(_combine_local, cfg=cfg, sweep=sweep))
+                partial(_combine_local, cfg=cfg, be=be))
         else:
             self._jcomb = jax.jit(shard_map(
-                partial(_combine_mesh_body, cfg=cfg, sweep=sweep,
+                partial(_combine_mesh_body, cfg=cfg, be=be,
                         data_axes=self.data_axes),
                 mesh=mesh,
                 in_specs=(P(self.data_axes), P(self.data_axes), P(None, None)),
                 out_specs=(P(None, None), P(None), P(None)),
                 check_vma=False))
-        self._jmerge = jax.jit(partial(
-            merge_summaries, m=cfg.m, eps=cfg.reducer_eps,
-            max_iter=cfg.merge_max_iter, hierarchical=cfg.hierarchical,
-            sweep_fn=sweep))
+        plan = cfg.window_plan()
+
+        def _window_merge(win_c, win_w):
+            res = merge_summaries(window_summary(win_c, win_w), plan,
+                                  backend=be)
+            return res.summary.centers, res.summary.masses
+
+        self._jmerge = jax.jit(_window_merge)
 
     # ------------------------------------------------------------- seed --
     def _driver_seed(self, x: jax.Array, w: jax.Array,
@@ -279,8 +290,9 @@ class StreamingBigFCM:
             raise RuntimeError("StreamingBigFCM has ingested no data yet")
         x = jnp.asarray(x, jnp.float32)
         if soft:
-            return soft_assign(x, self.state.centers, self.cfg.m)
-        return hard_assign(x, self.state.centers)
+            return self.backend.soft_assign(x, self.state.centers,
+                                            self.cfg.m)
+        return self.backend.hard_assign(x, self.state.centers)
 
     # ------------------------------------------------------- checkpoint --
     def state_dict(self) -> dict:

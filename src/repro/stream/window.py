@@ -1,29 +1,28 @@
-"""Sliding-window weighted-center summaries (the reducer over *time*).
+"""Sliding-window summary ring buffer (the reducer over *time*).
 
-BigFCM's reducer merges a handful of (C centers, C masses) pairs with a
-weighted FCM — a few KB regardless of how much data produced them.  That
-same sketch works as a *window slot*: each ingested mini-batch leaves one
-slot behind, old slots decay exponentially (weight ×= ``decay`` per
-push), and the global model is the WFCM merge of the live slots.
+BigFCM's reducer merges a handful of (C centers, C masses) pairs — a few
+KB regardless of how much data produced them.  That same sketch works as
+a *window slot*: each ingested mini-batch leaves one slot behind, old
+slots decay exponentially (mass ×= ``decay`` per push), and the global
+model is an `repro.engine.merge_summaries` reduce over the live slots
+(topology per `StreamConfig.merge_plan`: the fused ``windowed`` plan by
+default, which runs the whole window merge as ONE WFCM accumulating raw
+per-slot sums through the backend's accumulate entry point —
+`fcm_accumulate_pallas` on the Pallas backends).
 
-``merge_summaries`` is the paper's "multiple reduce jobs" variant applied
-to the time axis: slots merge pairwise in a balanced tree (log₂ W WFCM
-rounds) instead of one flat reduce — the shape that scales when windows
-live on different hosts.  A slot with zero total mass is a phantom: its
-points carry weight 0 and vanish from every accumulation, so resetting a
-window is just zeroing its masses.
-
-Everything here is shape-static jnp on (W, C, d) ring buffers, safe to
-call under jit with a traced cursor.
+A slot with zero total mass is a phantom: its points carry weight 0 and
+vanish from every accumulation, so resetting a window is just zeroing
+its masses.  Everything here is shape-static jnp on (W, C, d) ring
+buffers, safe to call under jit with a traced cursor.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.fcm import fcm
+from repro.engine import Summary
 
 
 def init_window(window: int, n_clusters: int, d: int
@@ -43,48 +42,9 @@ def push_summary(win_c: jax.Array, win_w: jax.Array, cursor: jax.Array,
     return win_c, win_w, (cursor + 1) % win_c.shape[0]
 
 
-def _pair_merge(ca, wa, cb, wb, *, m, eps, max_iter, sweep_fn):
-    """WFCM-merge two summaries; seed with the heavier one's centers."""
-    pts = jnp.concatenate([ca, cb], axis=0)          # (2C, d)
-    wts = jnp.concatenate([wa, wb], axis=0)          # (2C,)
-    init = jnp.where(jnp.sum(wa) >= jnp.sum(wb), ca, cb)
-    res = fcm(pts, init, m=m, eps=eps, max_iter=max_iter,
-              point_weights=wts, sweep_fn=sweep_fn)
-    return res.centers, res.center_weights
-
-
-def merge_summaries(win_c: jax.Array, win_w: jax.Array, *, m: float,
-                    eps: float = 5e-11, max_iter: int = 200,
-                    hierarchical: bool = True,
-                    sweep_fn=None) -> Tuple[jax.Array, jax.Array]:
-    """Collapse the whole window into one (C centers, C masses) model.
-
-    ``hierarchical=True`` merges slots in a balanced pairwise tree;
-    ``False`` runs one flat WFCM over all W·C sketch points (the paper's
-    single-reduce job).  Both ignore phantom (zero-mass) slots by
-    construction.
-    """
-    w = win_c.shape[0]
-    if w == 1:
-        return win_c[0], win_w[0]
-    if not hierarchical:
-        pts = win_c.reshape(-1, win_c.shape[-1])
-        wts = win_w.reshape(-1)
-        seed = win_c[jnp.argmax(jnp.sum(win_w, axis=-1))]
-        res = fcm(pts, seed, m=m, eps=eps, max_iter=max_iter,
-                  point_weights=wts, sweep_fn=sweep_fn)
-        return res.centers, res.center_weights
-    level = [(win_c[i], win_w[i]) for i in range(w)]
-    while len(level) > 1:
-        nxt = []
-        for i in range(0, len(level) - 1, 2):
-            (ca, wa), (cb, wb) = level[i], level[i + 1]
-            nxt.append(_pair_merge(ca, wa, cb, wb, m=m, eps=eps,
-                                   max_iter=max_iter, sweep_fn=sweep_fn))
-        if len(level) % 2:
-            nxt.append(level[-1])
-        level = nxt
-    return level[0]
+def window_summary(win_c: jax.Array, win_w: jax.Array) -> Summary:
+    """View the ring buffer as a stacked engine `Summary` (free)."""
+    return Summary(win_c, win_w)
 
 
 def window_mass(win_w: jax.Array) -> jax.Array:

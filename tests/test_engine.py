@@ -1,0 +1,205 @@
+"""`repro.engine` — sweep backends + merge plans (PR 3 tentpole).
+
+Covers the backend registry (names, auto-selection, extensibility),
+backend parity on off-lane shapes THROUGH the engine API, merge-plan
+topology equivalence, and the acceptance criterion that batch BigFCM,
+WFCMPB, and the streaming window all converge to the same centers on
+every backend.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BigFCMConfig, bigfcm_fit, fcm, wfcmpb
+from repro.core.metrics import fuzzy_objective
+from repro.data import make_blobs
+from repro.engine import (MergePlan, Summary, SweepBackend,
+                          available_backends, default_backend_name,
+                          fcm_accumulate, get_backend, merge_summaries,
+                          register_backend, resolve_backend)
+from repro.stream import StreamConfig, StreamingBigFCM
+
+BACKENDS = ["jnp", "pallas", "pallas_accumulate"]
+
+# C and d above the 128 MXU lane but NOT multiples of it — padding and
+# phantom-center masking both in play on the kernel backends.
+OFF_LANE_SHAPES = [(200, 129, 140), (96, 257, 129)]
+
+
+def _rand(n, d, c, seed=0):
+    rng = np.random.default_rng(seed + n + d + c)
+    return (jnp.asarray(rng.normal(size=(n, d)).astype(np.float32)),
+            jnp.asarray(rng.uniform(0.1, 3.0, size=(n,)).astype(np.float32)),
+            jnp.asarray(rng.normal(size=(c, d)).astype(np.float32)))
+
+
+# ------------------------------------------------------------- registry --
+
+def test_registry_names_and_auto_rule():
+    assert set(BACKENDS) <= set(available_backends())
+    # TPU → the fused kernel; CPU/GPU hosts → the jnp reference
+    want = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    assert default_backend_name() == want
+    assert resolve_backend(None).name == want
+    assert resolve_backend("auto").name == want
+    be = get_backend("pallas")
+    assert resolve_backend(be) is be
+    with pytest.raises(KeyError, match="unknown sweep backend"):
+        get_backend("cuda")
+
+
+# ----------------------------------------------------- parity (engine) --
+
+@pytest.mark.parametrize("name", BACKENDS)
+@pytest.mark.parametrize("n,d,c", OFF_LANE_SHAPES)
+def test_backend_parity_off_lane_shapes(name, n, d, c):
+    """jnp, pallas (interpret on CPU), and pallas_accumulate+normalize
+    produce identical (v_new, w_i, q) and raw accumulators through the
+    engine API."""
+    x, w, v = _rand(n, d, c)
+    be = get_backend(name)
+    for got, want in [(be.sweep(x, w, v, 2.0),
+                       get_backend("jnp").sweep(x, w, v, 2.0)),
+                      (be.accumulate(x, w, v, 2.0),
+                       fcm_accumulate(x, w, v, 2.0))]:
+        for g, e in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(e),
+                                       rtol=3e-4, atol=3e-3)
+
+
+def test_custom_backend_registration_and_windowed_accumulate_path():
+    """The registry is open: a wrapper backend slots into every consumer,
+    and the ``windowed`` plan reaches it ONLY through the raw accumulate
+    entry point (the fcm_accumulate_pallas fusion seam)."""
+    calls = {"accumulate": 0, "sweep": 0}
+
+    class Counting(SweepBackend):
+        name = "counting"
+
+        def accumulate(self, x, w, centers, m):
+            calls["accumulate"] += 1
+            return fcm_accumulate(x, w, centers, m)
+
+        def sweep(self, x, w, centers, m):
+            calls["sweep"] += 1
+            return super().sweep(x, w, centers, m)
+
+    from repro.engine import backend as backend_mod
+    register_backend(Counting())
+    try:
+        rng = np.random.default_rng(1)
+        s = Summary(
+            jnp.asarray(rng.normal(size=(4, 3, 2)).astype(np.float32)),
+            jnp.asarray(rng.uniform(0.5, 2, size=(4, 3))
+                        .astype(np.float32)))
+        merge_summaries(s, MergePlan("windowed", m=2.0), backend="counting")
+        assert calls["accumulate"] == 4 * 2  # per slot × (loop trace+final)
+        assert calls["sweep"] == 0
+    finally:  # don't leak the test backend into the process registry
+        backend_mod._REGISTRY.pop("counting", None)
+
+
+# --------------------------------------------------------- merge plans --
+
+def test_flat_and_windowed_topologies_agree_exactly():
+    """``windowed`` is the flat reduce with the normalization deferred
+    across per-slot raw sums — same math, same fixed point."""
+    rng = np.random.default_rng(3)
+    s = Summary(jnp.asarray(rng.normal(size=(6, 4, 3)).astype(np.float32)),
+                jnp.asarray(rng.uniform(0.5, 2, size=(6, 4))
+                            .astype(np.float32)))
+    plan = dict(m=2.0, eps=1e-12, max_iter=300)
+    rf = merge_summaries(s, MergePlan("flat", **plan))
+    rw = merge_summaries(s, MergePlan("windowed", **plan))
+    np.testing.assert_allclose(np.asarray(rf.summary.centers),
+                               np.asarray(rw.summary.centers), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(rf.summary.masses),
+                               np.asarray(rw.summary.masses), rtol=1e-4)
+
+
+def test_pairwise_topology_comparable_quality_not_mass():
+    """The pairwise tree fits the same sketch comparably well — but mass
+    is NOT conserved by WFCM (Σ u^m < 1 for m > 1), so its extra merge
+    rounds legitimately shrink total mass vs the single flat round."""
+    rng = np.random.default_rng(4)
+    s = Summary(jnp.asarray(rng.normal(size=(4, 3, 2)).astype(np.float32)),
+                jnp.asarray(rng.uniform(0.5, 2, size=(4, 3))
+                            .astype(np.float32)))
+    rt = merge_summaries(s, MergePlan("pairwise", m=2.0))
+    rf = merge_summaries(s, MergePlan("flat", m=2.0))
+    pts = s.centers.reshape(-1, 2)
+    wts = s.masses.reshape(-1)
+    q_t = float(fuzzy_objective(pts, rt.summary.centers, point_weights=wts))
+    q_f = float(fuzzy_objective(pts, rf.summary.centers, point_weights=wts))
+    assert np.isfinite(np.asarray(rt.summary.centers)).all()
+    assert q_t <= 1.25 * q_f and q_f <= 1.25 * q_t
+    assert float(rt.summary.masses.sum()) > 0
+
+
+def test_merge_single_slot_and_bad_plan():
+    s = Summary(jnp.ones((1, 2, 3)), jnp.ones((1, 2)))
+    r = merge_summaries(s, MergePlan("flat"))
+    np.testing.assert_array_equal(np.asarray(r.summary.centers),
+                                  np.ones((2, 3)))
+    assert int(r.n_iter) == 0
+    # with an explicit seed the reducer WFCM still polishes a lone slot
+    rng = np.random.default_rng(9)
+    s1 = Summary(jnp.asarray(rng.normal(size=(1, 3, 2)).astype(np.float32)),
+                 jnp.ones((1, 3)))
+    rp = merge_summaries(s1, MergePlan("flat", eps=1e-12),
+                         init=s1.centers[0] + 0.1)
+    assert int(rp.n_iter) >= 1
+    assert np.isfinite(np.asarray(rp.summary.centers)).all()
+    with pytest.raises(ValueError, match="topology"):
+        MergePlan("ring")
+    with pytest.raises(ValueError, match="stacked"):
+        merge_summaries(Summary(jnp.ones((2, 3)), jnp.ones((2,))))
+    s2 = Summary(jnp.ones((2, 2, 3)), jnp.ones((2, 2)))
+    with pytest.raises(ValueError, match="pairwise"):
+        merge_summaries(s2, MergePlan("pairwise"), init=jnp.ones((2, 3)))
+
+
+# ------------------------------------- convergence across layers/backends --
+
+@pytest.mark.parametrize("name", BACKENDS)
+def test_batch_wfcmpb_stream_converge_per_backend(name):
+    """Acceptance: batch BigFCM, WFCMPB, and the streaming window reach
+    the same centers on every backend (pallas in interpret mode on CPU)."""
+    x, y = make_blobs(900, 4, 3, seed=7)
+    x = jnp.asarray(x)
+    ref = np.sort(np.asarray(
+        fcm(x, x[:3], m=2.0, eps=1e-9, max_iter=200).centers), axis=0)
+
+    batch = bigfcm_fit(x, BigFCMConfig(n_clusters=3, sample_size=256,
+                                       max_iter=150, backend=name, seed=1))
+    np.testing.assert_allclose(np.sort(np.asarray(batch.centers), axis=0),
+                               ref, atol=0.3)
+
+    pb = wfcmpb(x, x[:3], m=2.0, eps=1e-8, max_iter=150, block_size=512,
+                backend=name)
+    np.testing.assert_allclose(np.sort(np.asarray(pb.centers), axis=0),
+                               ref, atol=0.3)
+
+    cfg = StreamConfig(n_clusters=3, window=3, max_iter=150,
+                       driver_sample=256, backend=name, seed=0)
+    model = StreamingBigFCM(cfg)
+    for i in range(3):
+        model.ingest(x[i * 300:(i + 1) * 300])
+    np.testing.assert_allclose(
+        np.sort(np.asarray(model.state.centers), axis=0), ref, atol=0.35)
+
+
+@pytest.mark.parametrize("plan", ["windowed", "pairwise", "flat"])
+def test_stream_merge_plans_all_converge(plan):
+    x, _ = make_blobs(900, 4, 3, seed=8)
+    ref = np.sort(np.asarray(
+        fcm(jnp.asarray(x), jnp.asarray(x[:3]), m=2.0, eps=1e-9,
+            max_iter=200).centers), axis=0)
+    cfg = StreamConfig(n_clusters=3, window=3, max_iter=150,
+                       driver_sample=256, merge_plan=plan, seed=0)
+    model = StreamingBigFCM(cfg)
+    for i in range(3):
+        model.ingest(x[i * 300:(i + 1) * 300])
+    np.testing.assert_allclose(
+        np.sort(np.asarray(model.state.centers), axis=0), ref, atol=0.35)

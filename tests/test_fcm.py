@@ -83,3 +83,37 @@ def test_m_exponent_variants():
         res = fcm(x, x[:3], m=m, eps=1e-8, max_iter=200)
         assert np.isfinite(np.asarray(res.centers)).all()
         assert float(res.objective) >= 0
+
+
+def test_soft_assign_matches_naive_formula():
+    """The log-space soft_assign equals the textbook Eq.-5 ratio where
+    the naive ``d2**(1/(m−1))`` form is still representable."""
+    x, _ = _blobs(n=200)
+    # offset seeds so no record sits exactly on a center (there the f32
+    # MXU distance expansion and the exact numpy form legitimately differ)
+    v = x[:4] + 0.5
+    for m in (1.5, 2.0, 3.0):
+        d2 = np.maximum(np.sum(
+            (np.asarray(x)[:, None, :] - np.asarray(v)[None]) ** 2, -1),
+            1e-12)
+        num = d2 ** (1.0 / (m - 1.0))
+        naive = 1.0 / (num * np.sum(1.0 / num, axis=-1, keepdims=True))
+        got = np.asarray(soft_assign(x, v, m=m))
+        np.testing.assert_allclose(got, naive, rtol=1e-4, atol=1e-6)
+
+
+def test_soft_assign_extreme_m_stays_finite():
+    """m near 1 makes the naive form overflow (d2^(1/(m−1)) = d2^100+);
+    the log-space rewrite must stay finite, normalized, and rank the
+    nearest center first."""
+    x, _ = _blobs(n=300)
+    xs = x * 1e3                      # large distances: d2 ~ 1e8
+    v = xs[:3]
+    for m in (1.01, 1.001):
+        u = np.asarray(soft_assign(xs, v, m=m))
+        assert np.isfinite(u).all()
+        np.testing.assert_allclose(u.sum(-1), 1.0, atol=1e-5)
+        assert np.all(u >= 0) and np.all(u <= 1 + 1e-6)
+        # as m → 1 memberships harden toward the nearest center
+        np.testing.assert_array_equal(u.argmax(-1),
+                                      np.asarray(hard_assign(xs, v)))

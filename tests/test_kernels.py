@@ -126,8 +126,7 @@ def test_kernel_inside_full_fcm_loop():
     rng = np.random.default_rng(11)
     x = jnp.asarray(rng.normal(size=(600, 8)).astype(np.float32))
     r_ref = fcm(x, x[:5], m=2.0, eps=1e-8, max_iter=100)
-    r_k = fcm(x, x[:5], m=2.0, eps=1e-8, max_iter=100,
-              sweep_fn=fcm_sweep_kernel)
+    r_k = fcm(x, x[:5], m=2.0, eps=1e-8, max_iter=100, backend="pallas")
     assert int(r_ref.n_iter) == int(r_k.n_iter)
     np.testing.assert_allclose(np.asarray(r_ref.centers),
                                np.asarray(r_k.centers), rtol=2e-3,

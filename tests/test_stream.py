@@ -20,11 +20,12 @@ from repro.core import BigFCMConfig, bigfcm_fit
 from repro.core.metrics import fuzzy_objective
 from repro.data import (iterator_source, make_blobs, make_moving_blobs,
                         replay_source, socket_sim_source, stream_loader)
+from repro.engine import MergePlan, merge_summaries
 from repro.ft import CheckpointManager
 from repro.serve import assign_stream, make_assigner
 from repro.stream import (DriftConfig, DriftDetector, StreamConfig,
-                          StreamingBigFCM, init_window, merge_summaries,
-                          push_summary)
+                          StreamingBigFCM, init_window, push_summary,
+                          window_summary)
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -76,7 +77,8 @@ def test_window_merge_ignores_phantom_slots():
     win_c, win_w = init_window(4, 4, 3)
     win_c, win_w, cur = push_summary(win_c, win_w, jnp.int32(0),
                                      centers, weights, decay=0.9)
-    merged_c, merged_w = merge_summaries(win_c, win_w, m=2.0)
+    merged_c, merged_w = merge_summaries(
+        window_summary(win_c, win_w), MergePlan("windowed", m=2.0)).summary
     # a single live slot merges to itself; phantoms contribute nothing
     np.testing.assert_allclose(np.asarray(merged_c), np.asarray(centers),
                                atol=1e-4)
@@ -97,22 +99,23 @@ def test_window_decay_halves_old_mass():
     np.testing.assert_allclose(got, [0.5, 1.0, 2.0])
 
 
-def test_window_hierarchical_matches_flat_merge():
+def test_window_pairwise_matches_windowed_merge():
     rng = np.random.default_rng(3)
     win_c = jnp.asarray(rng.normal(size=(4, 3, 2)).astype(np.float32))
     win_w = jnp.asarray(rng.uniform(0.5, 2, size=(4, 3)).astype(np.float32))
-    tree_c, tree_w = merge_summaries(win_c, win_w, m=2.0, hierarchical=True)
-    flat_c, flat_w = merge_summaries(win_c, win_w, m=2.0, hierarchical=False)
+    s = window_summary(win_c, win_w)
+    tree = merge_summaries(s, MergePlan("pairwise", m=2.0)).summary
+    fused = merge_summaries(s, MergePlan("windowed", m=2.0)).summary
     # both reductions fit the same weighted sketch comparably well
     # (mass is NOT conserved by WFCM — sum_i u^m < 1 for m > 1 — so the
     # tree's extra merge rounds legitimately shrink total weight)
     pts = win_c.reshape(-1, 2)
     wts = win_w.reshape(-1)
-    q_tree = float(fuzzy_objective(pts, tree_c, point_weights=wts))
-    q_flat = float(fuzzy_objective(pts, flat_c, point_weights=wts))
-    assert np.isfinite(np.asarray(tree_c)).all()
-    assert q_tree <= 1.25 * q_flat and q_flat <= 1.25 * q_tree
-    assert float(tree_w.sum()) > 0 and float(flat_w.sum()) > 0
+    q_tree = float(fuzzy_objective(pts, tree.centers, point_weights=wts))
+    q_fused = float(fuzzy_objective(pts, fused.centers, point_weights=wts))
+    assert np.isfinite(np.asarray(tree.centers)).all()
+    assert q_tree <= 1.25 * q_fused and q_fused <= 1.25 * q_tree
+    assert float(tree.masses.sum()) > 0 and float(fused.masses.sum()) > 0
 
 
 # ----------------------------------------------------------------- drift --
