@@ -4,7 +4,10 @@
 #   scripts/verify.sh          # fast: skips the two ~8-min `slow`
 #                              # multi-device subprocess tests
 #   scripts/verify.sh full     # the full tier-1 suite (~27 min on 1 core)
+#   scripts/verify.sh stream   # just the stream/event-time/engine tests
 #
+# Every mode prints the 10 slowest test durations (--durations=10) so
+# the ~27-minute tier-1 budget stays visible as the suite grows.
 # Extra args after the mode pass through to pytest:
 #   scripts/verify.sh fast tests/test_engine.py -k parity
 set -euo pipefail
@@ -14,8 +17,11 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 mode="${1:-fast}"
 [ "$#" -gt 0 ] && shift
 case "$mode" in
-  full) exec python -m pytest -x -q "$@" ;;
-  fast) exec python -m pytest -x -q -m "not slow" "$@" ;;
-  *) echo "usage: scripts/verify.sh [fast|full] [pytest args...]" >&2
+  full) exec python -m pytest -x -q --durations=10 "$@" ;;
+  fast) exec python -m pytest -x -q --durations=10 -m "not slow" "$@" ;;
+  stream) exec python -m pytest -x -q --durations=10 -m "not slow" \
+            tests/test_stream.py tests/test_event_time.py \
+            tests/test_engine.py "$@" ;;
+  *) echo "usage: scripts/verify.sh [fast|full|stream] [pytest args...]" >&2
      exit 2 ;;
 esac

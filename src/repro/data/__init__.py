@@ -1,12 +1,13 @@
 from .synth import (make_blobs, make_susy_like, make_higgs_like,
                     make_kdd_like, make_moving_blobs, iris, pima_like)
 from .loader import ShardedLoader, parse_records, normalize
-from .stream import (iterator_source, replay_source, socket_sim_source,
-                     stream_loader)
+from .stream import (iterator_source, out_of_order_source, replay_source,
+                     socket_sim_source, stamp_source, stream_loader)
 from .lm import synthetic_token_batches
 
 __all__ = ["make_blobs", "make_susy_like", "make_higgs_like",
            "make_kdd_like", "make_moving_blobs", "iris", "pima_like",
            "ShardedLoader", "parse_records", "normalize",
-           "iterator_source", "replay_source", "socket_sim_source",
-           "stream_loader", "synthetic_token_batches"]
+           "iterator_source", "out_of_order_source", "replay_source",
+           "socket_sim_source", "stamp_source", "stream_loader",
+           "synthetic_token_batches"]

@@ -44,13 +44,16 @@ def assign_stream(model, source, *, soft: bool = False,
     """Serve assignments over a chunk stream.
 
     ``model`` is a `StreamingBigFCM`; ``source`` yields (n_i, d) arrays
-    (any `repro.data.stream` source).  Per chunk, yields
+    or timestamped ``(x, ts)`` pairs (any `repro.data.stream` source —
+    event times are forwarded to `ingest` so an event-time model keeps
+    its watermark while serving).  Per chunk, yields
     ``(assignments, report)`` where ``report`` is the `IngestReport`
     when ``update=True`` (online learning while serving) and ``None``
     when the model is frozen (scoring-only replica).  Scoring runs
     through the model's own resolved backend.
     """
     for chunk in source:
-        x = np.asarray(chunk, np.float32)
-        report = model.ingest(x) if update else None
+        x, ts = chunk if isinstance(chunk, tuple) else (chunk, None)
+        x = np.asarray(x, np.float32)
+        report = model.ingest(x, ts=ts) if update else None
         yield np.asarray(model.assign(x, soft=soft)), report

@@ -1,18 +1,24 @@
 """Online/windowed BigFCM — continuous clustering over unbounded streams.
 
-See `streaming.StreamingBigFCM` for the state machine, `window` for the
-decayed sliding-window ring buffer, and `drift.DriftDetector` for
-re-seed triggering.  Stream *sources* live in `repro.data.stream`; the
-window merge itself is an `repro.engine.merge_summaries` plan
-(``StreamConfig.merge_plan``).
+See `streaming.StreamingBigFCM` for the state machine (event-time
+watermark gate → drift probe with cluster birth/death → combiner →
+window merge), `window` for the decayed sliding-window ring buffer and
+its event-time bucket routing, and `drift.DriftDetector` for re-seed /
+birth triggering.  Stream *sources* live in `repro.data.stream`
+(including `stamp_source` / `out_of_order_source` for event-time
+feeds); the window merge itself is an `repro.engine.merge_summaries`
+plan (``StreamConfig.merge_plan``).
 """
 from .drift import DriftConfig, DriftDetector
 from .streaming import (IngestReport, StreamConfig, StreamingBigFCM,
                         StreamState)
-from .window import init_window, push_summary, window_mass, window_summary
+from .window import (NO_BUCKET, advance_window, assign_slot,
+                     init_slot_buckets, init_window, place_summary,
+                     push_summary, window_mass, window_summary)
 
 __all__ = [
     "DriftConfig", "DriftDetector", "IngestReport", "StreamConfig",
-    "StreamingBigFCM", "StreamState", "init_window", "push_summary",
-    "window_mass", "window_summary",
+    "StreamingBigFCM", "StreamState", "NO_BUCKET", "advance_window",
+    "assign_slot", "init_slot_buckets", "init_window", "place_summary",
+    "push_summary", "window_mass", "window_summary",
 ]

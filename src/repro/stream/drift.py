@@ -19,7 +19,17 @@ A batch is flagged as drift when either statistic exceeds
 do NOT update the EWMAs (one drift must not mask the next), mirroring
 the straggler monitor's outlier-exclusion rule.
 
-Detector state is three scalars, exported as arrays so it checkpoints
+A third statistic separates *partial* from *global* regime change (the
+cluster-birth path): the **residual scale** — the median over the batch
+of each record's min squared distance to the current centers — gets its
+own EWMA.  Records whose residual exceeds ``resid_ratio ×`` that EWMA
+are *outliers* (mass the current model cannot explain); when the
+outlier mass fraction is small the right response is to spawn ONE new
+center from those records (`StreamingBigFCM` birth), and only when most
+of the batch is outlying (``> reseed_frac``) does an objective-drift
+flag escalate to the full driver re-seed.
+
+Detector state is four scalars, exported as arrays so it checkpoints
 inside the `StreamingBigFCM` state tree.
 """
 from __future__ import annotations
@@ -38,6 +48,9 @@ class DriftConfig:
     shift_threshold: float = 5.0  # center-shift ratio that flags drift
     min_batches: int = 3         # EWMA warm-up before flagging
     shift_floor: float = 1e-6    # ignore shift ratios off a ~zero EWMA
+    resid_ratio: float = 8.0     # outlier = residual > ratio × EWMA median
+    birth_min_frac: float = 0.04  # outlier mass fraction that births a center
+    reseed_frac: float = 0.5     # outlier fraction above which drift → reseed
 
 
 class DriftDetector:
@@ -50,6 +63,7 @@ class DriftDetector:
     def reset(self) -> None:
         self.ewma_q: Optional[float] = None
         self.ewma_shift: Optional[float] = None
+        self.ewma_resid: Optional[float] = None
         self.n = 0
 
     # ------------------------------------------------------------ checks --
@@ -65,8 +79,16 @@ class DriftDetector:
                 and shift > self.cfg.shift_threshold
                 * max(self.ewma_shift, self.cfg.shift_floor))
 
+    def outlier_threshold(self) -> Optional[float]:
+        """Residual above which a record is an outlier (mass the current
+        centers cannot explain); None until the residual EWMA warms up."""
+        if self.n < self.cfg.min_batches or self.ewma_resid is None:
+            return None
+        return self.cfg.resid_ratio * self.ewma_resid
+
     # ----------------------------------------------------------- observe --
-    def observe(self, q_norm: float, shift: float, drifted: bool) -> None:
+    def observe(self, q_norm: float, shift: float, drifted: bool,
+                resid_med: Optional[float] = None) -> None:
         """Fold this batch into the EWMAs (skipped when flagged)."""
         if drifted:
             return
@@ -75,6 +97,10 @@ class DriftDetector:
                        else (1 - a) * self.ewma_q + a * q_norm)
         self.ewma_shift = (shift if self.ewma_shift is None
                            else (1 - a) * self.ewma_shift + a * shift)
+        if resid_med is not None and math.isfinite(resid_med):
+            self.ewma_resid = (resid_med if self.ewma_resid is None
+                               else (1 - a) * self.ewma_resid
+                               + a * resid_med)
         self.n += 1
 
     # -------------------------------------------------------- checkpoint --
@@ -84,12 +110,16 @@ class DriftDetector:
             "ewma_q": np.float32(nan if self.ewma_q is None else self.ewma_q),
             "ewma_shift": np.float32(
                 nan if self.ewma_shift is None else self.ewma_shift),
+            "ewma_resid": np.float32(
+                nan if self.ewma_resid is None else self.ewma_resid),
             "n": np.int32(self.n),
         }
 
     def load_state_arrays(self, tree: Dict[str, np.ndarray]) -> None:
         q = float(np.asarray(tree["ewma_q"]))
         s = float(np.asarray(tree["ewma_shift"]))
+        r = float(np.asarray(tree["ewma_resid"]))
         self.ewma_q = None if math.isnan(q) else q
         self.ewma_shift = None if math.isnan(s) else s
+        self.ewma_resid = None if math.isnan(r) else r
         self.n = int(np.asarray(tree["n"]))

@@ -14,15 +14,32 @@ A slot with zero total mass is a phantom: its points carry weight 0 and
 vanish from every accumulation, so resetting a window is just zeroing
 its masses.  Everything here is shape-static jnp on (W, C, d) ring
 buffers, safe to call under jit with a traced cursor.
+
+**Event-time mode** (`StreamConfig.event_time`) re-keys the ring by
+*event-time bucket* instead of arrival order: bucket
+``b = floor(t / slot_span)`` owns ring slot ``b mod W``
+(`assign_slot`), the head bucket follows the max event time seen, and
+decay is applied per *bucket advance* rather than per push
+(`advance_window`).  A summary landing in an already-occupied slot of
+the SAME bucket — a second mini-batch of the bucket, on time or late —
+*merges into* the slot through the engine's raw accumulate entry
+(`place_summary` with a ``windowed`` plan) instead of overwriting it,
+so a late summary scaled by the decay it missed is exactly equivalent
+to having pushed it on time (WFCM is homogeneous in the point weights).
 """
 from __future__ import annotations
 
+import math
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.engine import Summary
+from repro.engine import MergePlan, Summary, merge_summaries
+
+# Sentinel bucket id for a ring slot that has never been filled (any
+# real bucket id compares greater).
+NO_BUCKET = -(2 ** 31 - 1)
 
 
 def init_window(window: int, n_clusters: int, d: int
@@ -50,3 +67,64 @@ def window_summary(win_c: jax.Array, win_w: jax.Array) -> Summary:
 def window_mass(win_w: jax.Array) -> jax.Array:
     """Total live (decayed) record mass across the window."""
     return jnp.sum(win_w)
+
+
+# ------------------------------------------------------------ event time --
+
+def init_slot_buckets(window: int) -> jax.Array:
+    """Per-slot bucket ids for an empty event-time ring — all NO_BUCKET."""
+    return jnp.full((window,), NO_BUCKET, jnp.int32)
+
+
+def assign_slot(event_time: float, watermark: float, *, slot_span: float,
+                window: int) -> Tuple[int, int, bool]:
+    """Route an event time to its window slot under a watermark.
+
+    Returns ``(bucket, slot, late)``: the event-time bucket
+    ``floor(t / slot_span)``, its ring slot ``bucket mod window``, and
+    whether the event time is already behind the watermark (too late —
+    the caller drops and counts it rather than corrupting a recycled
+    slot).
+    """
+    bucket = int(math.floor(event_time / slot_span))
+    return bucket, bucket % window, bool(event_time < watermark)
+
+
+def advance_window(win_w: jax.Array, slot_buckets: jax.Array,
+                   head_bucket: int, bucket: int, *, decay: float
+                   ) -> jax.Array:
+    """Advance the head to ``bucket`` (> head): decay every live slot
+    once per bucket crossed and zero slots that fell out of the
+    W-bucket span (their ring position now belongs to a newer bucket).
+    Returns the updated masses; centers need no touch (zero mass is a
+    phantom)."""
+    win_w = win_w * jnp.float32(decay) ** (bucket - head_bucket)
+    live = slot_buckets > bucket - win_w.shape[0]
+    return win_w * live[:, None].astype(jnp.float32)
+
+
+def place_summary(win_c: jax.Array, win_w: jax.Array,
+                  slot_buckets: jax.Array, slot: int, bucket: int,
+                  centers: jax.Array, weights: jax.Array, *,
+                  plan: MergePlan, backend=None, scale: float = 1.0
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Land one mini-batch summary in its event-time slot.
+
+    ``scale`` is the decay the summary missed (``decay**(head−bucket)``
+    for a late arrival) so late and on-time placement commute with
+    `advance_window`.  An empty slot is set; an occupied slot of the
+    same bucket is *merged into* via the engine's accumulate entry (the
+    ``windowed`` plan) — never overwritten.
+    """
+    w_in = weights.astype(jnp.float32) * jnp.float32(scale)
+    if (int(slot_buckets[slot]) == bucket
+            and float(jnp.sum(win_w[slot])) > 0.0):
+        merged = merge_summaries(
+            Summary(jnp.stack([win_c[slot], centers.astype(jnp.float32)]),
+                    jnp.stack([win_w[slot], w_in])),
+            plan, backend=backend).summary
+        c_new, w_new = merged.centers, merged.masses
+    else:
+        c_new, w_new = centers.astype(jnp.float32), w_in
+    return (win_c.at[slot].set(c_new), win_w.at[slot].set(w_new),
+            slot_buckets.at[slot].set(bucket))

@@ -1,7 +1,39 @@
+import functools
 import os
 import sys
+
+import numpy as np
 
 # NOTE: device count is deliberately NOT forced here — smoke tests and
 # benches must see the host's real (1-device) topology.  Multi-device
 # tests spawn subprocesses that set XLA_FLAGS before importing jax.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def seeded_cases(gen, n=20):
+    """Seeded random-case fallback for ``@given`` when `hypothesis` is
+    not installed (it is absent in this container and pip installs are
+    not allowed): decorate a one-argument property test and run it over
+    ``n`` deterministic cases drawn from ``gen(rng)``.
+
+    ``gen`` mirrors a hypothesis strategy as a plain function of a
+    `numpy.random.Generator`; seeds are 0..n−1, so failures reproduce
+    with ``gen(np.random.default_rng(seed))``.
+    """
+    def deco(test):
+        @functools.wraps(test)
+        def runner():
+            for seed in range(n):
+                case = gen(np.random.default_rng(seed))
+                try:
+                    test(case)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"seeded fallback case failed (seed={seed}, "
+                        f"regenerate with gen(np.random.default_rng("
+                        f"{seed}))): {e}") from e
+        # pytest resolves fixtures through __wrapped__'s signature; the
+        # case argument is supplied here, not by a fixture
+        del runner.__wrapped__
+        return runner
+    return deco

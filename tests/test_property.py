@@ -1,37 +1,75 @@
-"""Hypothesis property tests on system invariants."""
+"""Property tests on system invariants.
+
+With `hypothesis` installed these run as real ``@given`` property tests
+(shrinking and all); on boxes without it (this container — pip installs
+are not allowed) each test falls back to `conftest.seeded_cases`: the
+same generator expressed over a seeded `numpy` rng, run over a fixed
+seed range.  Either way every test takes ONE argument — the drawn case.
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
+from conftest import seeded_cases
 from repro.core import fcm, soft_assign
 from repro.core.fcm import fcm_sweep
 from repro.core.sampling import parker_hall_sample_size, thompson_sample_size
 from repro.kernels.ops import fcm_sweep_kernel
 from repro.kernels.ref import fcm_sweep_ref
 
-_f32 = st.floats(-50, 50, allow_nan=False, width=32)
 
+# ----------------------------------------------------------- generators --
+# Each case generator exists twice: as a hypothesis strategy (the @given
+# path) and as a plain function of a numpy Generator (the fallback).
 
-def _data(draw, nmin=8, nmax=64, dmin=1, dmax=8):
-    n = draw(st.integers(nmin, nmax))
-    d = draw(st.integers(dmin, dmax))
-    rows = draw(st.lists(st.lists(_f32, min_size=d, max_size=d),
-                         min_size=n, max_size=n))
-    return np.array(rows, np.float32)
-
-
-@st.composite
-def dataset(draw):
-    x = _data(draw)
-    c = draw(st.integers(2, min(5, x.shape[0])))
+def _gen_dataset(rng) -> tuple:
+    n = int(rng.integers(8, 65))
+    d = int(rng.integers(1, 9))
+    x = rng.uniform(-50, 50, size=(n, d)).astype(np.float32)
+    c = int(rng.integers(2, min(5, n) + 1))
     return x, c
 
 
-@given(dataset())
-@settings(max_examples=25, deadline=None)
+def _gen_sample_args(rng) -> tuple:
+    return (int(rng.integers(2, 65)), float(rng.uniform(0.01, 0.5)),
+            float(rng.choice([0.05, 0.1, 0.01])))
+
+
+if HAVE_HYPOTHESIS:
+    _f32 = st.floats(-50, 50, allow_nan=False, width=32)
+
+    @st.composite
+    def dataset(draw):
+        n = draw(st.integers(8, 64))
+        d = draw(st.integers(1, 8))
+        rows = draw(st.lists(st.lists(_f32, min_size=d, max_size=d),
+                             min_size=n, max_size=n))
+        x = np.array(rows, np.float32)
+        c = draw(st.integers(2, min(5, x.shape[0])))
+        return x, c
+
+    sample_args = st.tuples(st.integers(2, 64), st.floats(0.01, 0.5),
+                            st.sampled_from([0.05, 0.1, 0.01]))
+
+    def property_cases(kind, n=20):
+        strat = dataset() if kind == "dataset" else sample_args
+        return lambda f: settings(max_examples=max(n, 20), deadline=None)(
+            given(strat)(f))
+else:
+    def property_cases(kind, n=20):
+        gen = _gen_dataset if kind == "dataset" else _gen_sample_args
+        return seeded_cases(gen, n)
+
+
+# ----------------------------------------------------------- properties --
+
+@property_cases("dataset", n=15)
 def test_memberships_sum_to_one_and_bounded(xc):
     x, c = xc
     x = jnp.asarray(x) + jnp.linspace(0, 1e-3, x.shape[0])[:, None]
@@ -40,8 +78,7 @@ def test_memberships_sum_to_one_and_bounded(xc):
     np.testing.assert_allclose(u.sum(-1), 1.0, atol=1e-4)
 
 
-@given(dataset())
-@settings(max_examples=25, deadline=None)
+@property_cases("dataset", n=10)
 def test_centers_stay_in_bounding_box(xc):
     x, c = xc
     xj = jnp.asarray(x)
@@ -51,8 +88,7 @@ def test_centers_stay_in_bounding_box(xc):
     assert np.all(v >= lo) and np.all(v <= hi)
 
 
-@given(dataset())
-@settings(max_examples=20, deadline=None)
+@property_cases("dataset", n=12)
 def test_sweep_permutation_invariant(xc):
     x, c = xc
     w = np.ones(x.shape[0], np.float32)
@@ -66,8 +102,7 @@ def test_sweep_permutation_invariant(xc):
                                    rtol=2e-3, atol=2e-3)
 
 
-@given(dataset())
-@settings(max_examples=20, deadline=None)
+@property_cases("dataset", n=8)
 def test_kernel_ref_agree_property(xc):
     x, c = xc
     w = np.abs(np.random.default_rng(1).normal(
@@ -81,10 +116,9 @@ def test_kernel_ref_agree_property(xc):
                                    rtol=1e-3, atol=1e-2)
 
 
-@given(st.integers(2, 64), st.floats(0.01, 0.5),
-       st.sampled_from([0.05, 0.1, 0.01]))
-@settings(max_examples=50, deadline=None)
-def test_sample_sizes_positive_monotone(c, r, alpha):
+@property_cases("sample_args", n=40)
+def test_sample_sizes_positive_monotone(cra):
+    c, r, alpha = cra
     lam = parker_hall_sample_size(c, r, alpha)
     assert lam >= 1
     assert parker_hall_sample_size(c + 1, r, alpha) >= lam

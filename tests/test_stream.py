@@ -57,6 +57,38 @@ def test_streaming_drift_reseed_matches_batch_fit():
     assert q_stream <= 1.05 * q_batch, (q_stream, q_batch)
 
 
+def test_streaming_birth_death_on_blob_split():
+    """ISSUE-4 satellite: when only ONE component of the mixture moves
+    (its mode splits off to a new location), the model spawns a center
+    from the high-residual records instead of re-running the driver, and
+    retires the starved old center once its window mass decays below the
+    floor — final center count and objective match a fresh batch fit."""
+    c, d, chunk, n_chunks, drift_at = 4, 6, 1200, 10, 4
+    cfg = StreamConfig(n_clusters=c, window=3, decay=0.6, max_iter=200,
+                       driver_sample=384, death_mass_floor=0.25,
+                       reseed_cooldown=2, seed=0)
+    model = StreamingBigFCM(cfg)
+    chunks = []
+    for x, _ in make_moving_blobs(n_chunks, chunk, d, c, drift_at=drift_at,
+                                  shift=12.0, seed=7, drift_clusters=(0,)):
+        chunks.append(x)
+        model.ingest(x)
+
+    # a center was spawned and a center retired — with NO full re-seed
+    assert int(model.state.reseeds) == 0
+    assert int(model.state.births) == 1
+    assert int(model.state.deaths) == 1
+    assert model.state.centers.shape[0] == c
+
+    # the adapted model fits the post-split regime like a fresh batch fit
+    x_new = jnp.asarray(np.concatenate(chunks[-3:]))
+    batch = bigfcm_fit(x_new, BigFCMConfig(n_clusters=c, sample_size=384,
+                                           seed=1))
+    q_stream = float(fuzzy_objective(x_new, model.state.centers, cfg.m))
+    q_batch = float(fuzzy_objective(x_new, batch.centers, cfg.m))
+    assert q_stream <= 1.05 * q_batch, (q_stream, q_batch)
+
+
 def test_streaming_stationary_no_false_reseed():
     cfg = StreamConfig(n_clusters=3, window=3, max_iter=200,
                        driver_sample=256, seed=0)
@@ -65,7 +97,9 @@ def test_streaming_stationary_no_false_reseed():
     for x_c in replay_source(x, 1000):
         rep = model.ingest(x_c)
         assert not rep.drifted
+        assert rep.born == 0 and rep.died == 0
     assert int(model.state.reseeds) == 0
+    assert int(model.state.births) == 0 and int(model.state.deaths) == 0
 
 
 # ---------------------------------------------------------------- window --
