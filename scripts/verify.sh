@@ -5,6 +5,8 @@
 #                              # multi-device subprocess tests
 #   scripts/verify.sh full     # the full tier-1 suite (~27 min on 1 core)
 #   scripts/verify.sh stream   # just the stream/event-time/engine tests
+#   scripts/verify.sh cache    # just the data-plane (ChunkStore/loader)
+#                              # tests
 #
 # Every mode prints the 10 slowest test durations (--durations=10) so
 # the ~27-minute tier-1 budget stays visible as the suite grows.
@@ -22,6 +24,8 @@ case "$mode" in
   stream) exec python -m pytest -x -q --durations=10 -m "not slow" \
             tests/test_stream.py tests/test_event_time.py \
             tests/test_engine.py "$@" ;;
-  *) echo "usage: scripts/verify.sh [fast|full|stream] [pytest args...]" >&2
+  cache) exec python -m pytest -x -q --durations=10 -m "not slow" \
+           tests/test_plane.py tests/test_loader.py "$@" ;;
+  *) echo "usage: scripts/verify.sh [fast|full|stream|cache] [pytest args...]" >&2
      exit 2 ;;
 esac

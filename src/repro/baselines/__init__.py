@@ -1,4 +1,4 @@
-from .mr_fkm import mr_fuzzy_kmeans
+from .mr_fkm import mr_fuzzy_kmeans, mr_fuzzy_kmeans_store
 from .kmeans import mr_kmeans
 
-__all__ = ["mr_fuzzy_kmeans", "mr_kmeans"]
+__all__ = ["mr_fuzzy_kmeans", "mr_fuzzy_kmeans_store", "mr_kmeans"]

@@ -1,12 +1,16 @@
 from .fcm import (FCMResult, fcm, wfcm, fcm_sweep, membership_terms,
                   pairwise_sqdist, soft_assign, hard_assign)
-from .wfcmpb import wfcmpb
-from .bigfcm import BigFCMConfig, BigFCMResult, bigfcm_fit, run_driver
+from .outofcore import make_accumulator, ooc_accumulate, ooc_fcm, ooc_sweep
+from .wfcmpb import wfcmpb, wfcmpb_batches, wfcmpb_store
+from .bigfcm import (BigFCMConfig, BigFCMResult, bigfcm_fit,
+                     bigfcm_fit_store, run_driver)
 from .sampling import parker_hall_sample_size, thompson_sample_size
 
 __all__ = [
     "FCMResult", "fcm", "wfcm", "fcm_sweep", "membership_terms",
-    "pairwise_sqdist", "soft_assign", "hard_assign", "wfcmpb",
-    "BigFCMConfig", "BigFCMResult", "bigfcm_fit", "run_driver",
-    "parker_hall_sample_size", "thompson_sample_size",
+    "pairwise_sqdist", "soft_assign", "hard_assign",
+    "make_accumulator", "ooc_accumulate", "ooc_fcm", "ooc_sweep",
+    "wfcmpb", "wfcmpb_batches", "wfcmpb_store",
+    "BigFCMConfig", "BigFCMResult", "bigfcm_fit", "bigfcm_fit_store",
+    "run_driver", "parker_hall_sample_size", "thompson_sample_size",
 ]

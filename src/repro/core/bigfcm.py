@@ -25,6 +25,18 @@ once in `bigfcm_fit` and threaded to the driver, combiner, and reducer.
 The combiner+reducer is ONE jit'd XLA program: the paper's "just one
 map-reduce job works iteratively" claim.  The per-iteration-job baseline
 (Ludwig / Mahout FKM) lives in `repro.baselines.mr_fkm`.
+
+**Out-of-core** (the data side of the paper's caching design): passing a
+`repro.data.cache.ChunkStore` instead of an array — or calling
+`bigfcm_fit_store` directly — runs the same structure against a dataset
+that never fits in memory.  Combiners consume chunk shards from a
+deterministic `repro.data.plane.PartitionPlan`; each local fit is the
+multi-pass `repro.core.outofcore.ooc_fcm` (every iteration streams the
+shard's memory-mapped chunks through the engine's raw-accumulate entry,
+summing partials across chunks before ONE normalization) when the
+driver race picks FCM, or the single-pass `wfcmpb_store` progression
+when it picks WFCMPB; the reducer is the identical flat merge plan over
+the shard summaries.
 """
 from __future__ import annotations
 
@@ -35,15 +47,20 @@ from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.data.cache import ChunkStore
+from repro.data.plane import PartitionPlan, batched, plan_partitions, \
+    shard_batches
 from repro.engine import (MergePlan, Summary, merge_summaries,
                           resolve_backend)
 
 from .fcm import fcm
+from .outofcore import make_accumulator, ooc_accumulate, ooc_fcm
 from .sampling import parker_hall_sample_size
-from .wfcmpb import wfcmpb
+from .wfcmpb import wfcmpb, wfcmpb_store
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,6 +132,16 @@ def run_driver(x_sample: jax.Array, cfg: BigFCMConfig, key: jax.Array):
     return v_init, flag, t_s, t_f
 
 
+def _initial_centers(x_sample: jax.Array, cfg: BigFCMConfig, k_seed):
+    """Driver race (lines 1–6), or the Table-2 random-seed ablation —
+    shared by the in-memory and out-of-core fit paths."""
+    if cfg.use_driver:
+        return run_driver(x_sample, cfg, k_seed)
+    idx = jax.random.choice(k_seed, x_sample.shape[0], (cfg.n_clusters,),
+                            replace=False)
+    return jnp.take(x_sample, idx, axis=0), True, 0.0, 0.0
+
+
 # --------------------------------------------------- combiner + reducer ---
 
 def _combine_reduce(x_local, w_local, v_init, *, cfg: BigFCMConfig,
@@ -166,7 +193,19 @@ def bigfcm_fit(
     point_weights: Optional[jax.Array] = None,
     key: Optional[jax.Array] = None,
 ) -> BigFCMResult:
-    """Cluster ``x`` (N, d) with BigFCM on ``mesh`` (or single device)."""
+    """Cluster ``x`` (N, d) with BigFCM on ``mesh`` (or single device).
+
+    ``x`` may also be a `ChunkStore`, in which case the fit runs the
+    out-of-core path (`bigfcm_fit_store`) — logical shard combiners
+    streaming memory-mapped chunks, no mesh placement."""
+    if isinstance(x, ChunkStore):
+        if mesh is not None or point_weights is not None:
+            raise ValueError(
+                "bigfcm_fit over a ChunkStore is the out-of-core path: "
+                "mesh/point_weights are not supported — materialize the "
+                "store for the in-memory mesh path, or call "
+                "bigfcm_fit_store for shard-planned control")
+        return bigfcm_fit_store(x, cfg, key=key)
     key = key if key is not None else jax.random.PRNGKey(cfg.seed)
     k_sample, k_seed = jax.random.split(key)
     n = x.shape[0]
@@ -178,13 +217,7 @@ def bigfcm_fit(
     sample_idx = jax.random.choice(k_sample, n, (lam,), replace=False)
     x_sample = jnp.take(jnp.asarray(x), sample_idx, axis=0)
 
-    if cfg.use_driver:
-        v_init, flag, t_s, t_f = run_driver(x_sample, cfg, k_seed)
-    else:  # ablation: random initial centers, no pre-clustering (Table 2)
-        idx = jax.random.choice(k_seed, lam, (cfg.n_clusters,),
-                                replace=False)
-        v_init, flag, t_s, t_f = jnp.take(x_sample, idx, axis=0), True, \
-            0.0, 0.0
+    v_init, flag, t_s, t_f = _initial_centers(x_sample, cfg, k_seed)
 
     w = (jnp.ones((n,), jnp.float32) if point_weights is None
          else jnp.asarray(point_weights, jnp.float32))
@@ -219,3 +252,121 @@ def bigfcm_fit(
     centers, cw, q, iters, r_it = jax.jit(job)(x_sharded, w_sharded, v_rep)
     diag = BigFCMDiagnostics(flag, t_s, t_f, lam, iters, r_it)
     return BigFCMResult(centers, cw, q, diag)
+
+
+# ------------------------------------------------------- out-of-core fit ---
+
+# Above this many rows the driver sample is drawn host-side in O(λ)
+# memory; `jax.random.choice(..., replace=False)` materializes O(n)
+# keys on device, which would defeat the out-of-core contract.
+_DEVICE_SAMPLE_ROWS = 1 << 24
+
+
+def _sample_rows(k_sample, n: int, lam: int) -> np.ndarray:
+    """λ distinct row indices from [0, n).  Device path below the size
+    cutoff (bit-identical to the in-memory fit's sample); O(λ)-memory
+    host-side rejection sampling above it (λ ≪ n there, so collisions
+    are negligible)."""
+    if n <= _DEVICE_SAMPLE_ROWS:
+        return np.asarray(jax.random.choice(k_sample, n, (lam,),
+                                            replace=False))
+    rng = np.random.default_rng(
+        int(jax.random.randint(k_sample, (), 0, np.iinfo(np.int32).max)))
+    seen: dict = dict.fromkeys(rng.integers(0, n, lam, dtype=np.int64))
+    while len(seen) < lam:
+        seen.update(dict.fromkeys(
+            rng.integers(0, n, lam - len(seen), dtype=np.int64)))
+    return np.fromiter(seen, np.int64, count=lam)
+
+
+def bigfcm_fit_store(
+    store: ChunkStore,
+    cfg: BigFCMConfig,
+    *,
+    n_shards: int = 1,
+    plan: Optional[PartitionPlan] = None,
+    batch_rows: Optional[int] = None,
+    key: Optional[jax.Array] = None,
+) -> BigFCMResult:
+    """BigFCM over a `ChunkStore` that need not fit in memory.
+
+    The paper's structure, host-orchestrated over the chunk cache:
+
+      Driver   — Parker–Hall sample gathered by global row index
+                 (`store.take`), same race / same seeds as the
+                 in-memory path.
+      Combiner — one per `PartitionPlan` shard (default: one shard =
+                 the whole store).  Multi-pass `ooc_fcm` when the race
+                 picks FCM — every iteration streams the shard's
+                 chunks through the backend's raw-accumulate entry and
+                 normalizes once — or single-pass `wfcmpb_store` when
+                 it picks WFCMPB.
+      Reducer  — the identical flat merge plan over the gathered shard
+                 summaries (degenerate self-polish for one shard), then
+                 one chunk pass for the global objective.
+
+    ``batch_rows`` (default: the store's chunk size) is the device
+    working-set: peak device memory is O(batch_rows·d + C·d) however
+    large the store is.  One shard mirrors the in-memory single-device
+    branch exactly — multi-pass FCM combiner *regardless of flag* (that
+    branch ignores the race too) plus the same degenerate self-polish —
+    so a store that *does* fit reproduces `bigfcm_fit` on the
+    materialized array to float32 summation order; the WFCMPB combiner
+    applies on multi-shard plans, mirroring the mesh combiners.
+    """
+    key = key if key is not None else jax.random.PRNGKey(cfg.seed)
+    k_sample, k_seed = jax.random.split(key)
+    n = store.n_rows
+    be = resolve_backend(cfg.backend)
+
+    lam = cfg.sample_size or parker_hall_sample_size(
+        cfg.n_clusters, cfg.r, cfg.alpha)
+    lam = min(lam, n)
+    x_sample = jnp.asarray(store.take(_sample_rows(k_sample, n, lam)))
+
+    v_init, flag, t_s, t_f = _initial_centers(x_sample, cfg, k_seed)
+
+    if plan is None:
+        # more shards than chunks would leave empty combiners — clamp
+        plan = plan_partitions(store, min(n_shards, store.n_chunks))
+    rows = int(batch_rows or store.chunk_rows)
+    shards = [s for s in range(plan.n_shards) if plan.shard_rows[s] > 0]
+    if not shards:
+        raise ValueError("bigfcm_fit_store: partition plan has no "
+                         "non-empty shard")
+    acc = make_accumulator(be, cfg.m)  # ONE compile for every shard/pass
+    locals_ = []
+    for s in shards:                   # empty shards contribute nothing
+        if flag or len(shards) == 1:   # 1 shard ≡ single-device branch
+            loc = ooc_fcm(lambda s=s: shard_batches(store, plan, s, rows),
+                          v_init, m=cfg.m, eps=cfg.combiner_eps,
+                          max_iter=cfg.max_iter, backend=be, acc=acc)
+        else:
+            loc = wfcmpb_store(store, v_init, m=cfg.m,
+                               eps=cfg.combiner_eps, max_iter=cfg.max_iter,
+                               batch_rows=rows, backend=be, plan=plan,
+                               shard=s, with_objective=False)
+        locals_.append(loc)
+    iters = jnp.stack([loc.n_iter for loc in locals_])
+
+    if len(locals_) == 1:
+        # Degenerate reduce (one combiner summary): the reducer WFCM is
+        # just a polish of the local sketch against itself — identical
+        # to the in-memory single-device branch.
+        local = locals_[0]
+        red = fcm(local.centers, local.centers, m=cfg.m,
+                  eps=cfg.reducer_eps, max_iter=cfg.max_iter,
+                  point_weights=local.center_weights, backend=be)
+        diag = BigFCMDiagnostics(flag, t_s, t_f, lam, iters, red.n_iter)
+        return BigFCMResult(red.centers, red.center_weights, red.objective,
+                            diag)
+
+    stacked = Summary(jnp.stack([loc.centers for loc in locals_]),
+                      jnp.stack([loc.center_weights for loc in locals_]))
+    red = merge_summaries(stacked, cfg.reducer_plan(), backend=be)
+    # Global objective of the merged centers over the full store — one
+    # more chunk pass through the raw accumulate entry (the q output).
+    _, _, q = ooc_accumulate(batched(store.iter_chunks(), rows),
+                             red.summary.centers, cfg.m, acc=acc)
+    diag = BigFCMDiagnostics(flag, t_s, t_f, lam, iters, red.n_iter)
+    return BigFCMResult(red.summary.centers, red.summary.masses, q, diag)

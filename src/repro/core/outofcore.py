@@ -1,0 +1,116 @@
+"""Multi-pass out-of-core sweeps — the engine's raw-accumulate entry
+point driven over chunked batches.
+
+The in-memory paths (`repro.core.fcm`, the `shard_map` combiner) hold
+the whole record block on device and converge inside one XLA
+``while_loop``.  When the dataset lives in a
+`repro.data.cache.ChunkStore` bigger than (device) memory, the same
+math runs **host-orchestrated** instead: every FCM iteration streams
+each fixed-size batch through the backend's ``accumulate`` entry —
+un-normalized (v_num, w_i, q) sums that add elementwise across chunks
+(the `pallas_accumulate` kernel on TPU) — and normalizes ONCE per
+iteration.  Phantom zero-weight padding rows contribute nothing, so
+chunked results match the monolithic sweep up to float32 summation
+order.
+
+``batches_factory`` arguments are zero-arg callables returning a fresh
+``(x, w)`` batch iterable — a multi-pass fit re-iterates the store once
+per iteration, which is exactly the access pattern the chunk cache
+(mmap re-reads, no re-parse) makes cheap; `repro.data.plane` provides
+the factories (`shard_batches` / `batched`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Iterable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine import resolve_backend
+from repro.engine.backend import _D2_FLOOR, BackendLike
+
+from .fcm import FCMResult
+
+BatchIterable = Iterable[Tuple[jax.Array, jax.Array]]
+BatchFactory = Callable[[], BatchIterable]
+
+
+@functools.lru_cache(maxsize=64)
+def _accumulator(be, m: float):
+    return jax.jit(lambda x, w, v: be.accumulate(x, w, v, m))
+
+
+def make_accumulator(backend: BackendLike, m: float):
+    """One jitted raw-accumulate dispatch per (backend, m) — cached, so
+    every shard/pass/fit with the same signature shares one jit entry
+    (backends are registry singletons, hence hashable keys)."""
+    return _accumulator(resolve_backend(backend), float(m))
+
+
+def ooc_accumulate(batches: BatchIterable, centers, m: float = 2.0, *,
+                   backend: BackendLike = None, acc=None):
+    """One raw accumulation sweep over an (x, w) batch iterable.
+
+    Returns the summed (v_num, w_i, q) accumulators — normalization is
+    the caller's (deferred, as everywhere in the engine)."""
+    acc = acc if acc is not None else make_accumulator(backend, m)
+    v = jnp.asarray(centers, jnp.float32)
+    v_num = w_i = q = None
+    for x, w in batches:
+        vn, wi, qi = acc(jnp.asarray(x, jnp.float32),
+                         jnp.asarray(w, jnp.float32), v)
+        if v_num is None:
+            v_num, w_i, q = vn, wi, qi
+        else:
+            v_num, w_i, q = v_num + vn, w_i + wi, q + qi
+    if v_num is None:
+        raise ValueError("ooc_accumulate: empty batch stream")
+    return v_num, w_i, q
+
+
+def ooc_sweep(batches: BatchIterable, centers, m: float = 2.0, *,
+              backend: BackendLike = None, acc=None):
+    """One full out-of-core sweep: chunked accumulate + the single
+    deferred normalization.  Returns (v_new, w_i, q)."""
+    v_num, w_i, q = ooc_accumulate(batches, centers, m,
+                                   backend=backend, acc=acc)
+    return v_num / jnp.maximum(w_i, _D2_FLOOR)[:, None], w_i, q
+
+
+def ooc_fcm(
+    batches_factory: BatchFactory,
+    init_centers: jax.Array,
+    *,
+    m: float = 2.0,
+    eps: float = 1e-6,
+    max_iter: int = 1000,
+    backend: BackendLike = None,
+    acc=None,
+) -> FCMResult:
+    """Multi-pass (weighted) FCM over a re-iterable chunked batch
+    stream — `repro.core.fcm.fcm` for data that does not fit in memory.
+
+    Each iteration is one pass over every batch through the raw
+    accumulate entry with ONE normalization; the stopping rule and the
+    final masses/objective sweep mirror `repro.engine.merge._converge`
+    exactly (max_i ‖ΔV_i‖² ≤ ε, then one more sweep for Eq. 6), so a
+    store that *does* fit reproduces the in-memory fit up to float32
+    summation order.
+
+    ``acc`` shares one `make_accumulator` dispatch across calls (e.g.
+    every shard of a fit) instead of re-jitting per call.
+    """
+    be = resolve_backend(backend)
+    acc = acc if acc is not None else make_accumulator(be, m)
+    v = v_prev = jnp.asarray(init_centers, jnp.float32)
+    n_iter = 0
+    while True:
+        delta = float(jnp.max(jnp.sum((v - v_prev) ** 2, axis=-1)))
+        if not (n_iter < max_iter and (n_iter == 0 or delta > eps)):
+            break
+        v_new, _, _ = ooc_sweep(batches_factory(), v, m, acc=acc)
+        v_prev, v = v, v_new
+        n_iter += 1
+    _, w_final, q = ooc_sweep(batches_factory(), v, m, acc=acc)
+    return FCMResult(v, w_final, jnp.int32(n_iter), q)

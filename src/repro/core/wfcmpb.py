@@ -8,9 +8,15 @@ merge the BigFCM reducer and the streaming window use.  The running
 summary is a FIXED-size (C centers, C weights) sketch, so the whole
 progression is a `lax.scan` — one XLA program, O(C·d) state, exactly
 the paper's single-pass property.
+
+That O(C·d) state is also why WFCMPB is the natural **out-of-core**
+algorithm: `wfcmpb_store` runs the same progression over a
+`repro.data.cache.ChunkStore`, one memory-mapped chunk batch per block,
+through one compiled step — single pass over data of any size.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -19,6 +25,7 @@ import jax.numpy as jnp
 from repro.engine import MergePlan, Summary, merge_summaries, resolve_backend
 
 from .fcm import FCMResult, fcm
+from .outofcore import BatchFactory, ooc_accumulate
 
 
 def wfcmpb(
@@ -77,3 +84,99 @@ def wfcmpb(
     # the accumulate entry's q output (Σ w·u^m·d²), through the backend.
     _, _, q = be.accumulate(x, w, final.centers, m)
     return FCMResult(final.centers, final.masses, iters, q)
+
+
+@functools.lru_cache(maxsize=32)
+def _block_step(be, m: float, eps: float, max_iter: int,
+                merge_max_iter: int):
+    """The compiled per-block step, cached on its (backend, scalars)
+    signature so every shard of a fit — and every fit with the same
+    config — shares one jit entry instead of re-tracing."""
+    plan = MergePlan("flat", m=m, eps=eps, max_iter=merge_max_iter)
+
+    @jax.jit
+    def step(bx, bw, v_prev, run_c, run_m):
+        res = fcm(bx, v_prev, m=m, eps=eps, max_iter=max_iter,
+                  point_weights=bw, backend=be)
+        merged = merge_summaries(
+            [Summary(run_c, run_m),
+             Summary(res.centers, res.center_weights)],
+            plan, backend=be, init=res.centers)
+        return (res.centers, merged.summary.centers,
+                merged.summary.masses, res.n_iter)
+
+    return step
+
+
+def wfcmpb_batches(
+    batches_factory: BatchFactory,
+    init_centers: jax.Array,
+    *,
+    m: float = 2.0,
+    eps: float = 1e-6,
+    max_iter: int = 1000,
+    merge_max_iter: int = 200,
+    backend=None,
+    with_objective: bool = True,
+) -> FCMResult:
+    """The progression of `wfcmpb` over a re-iterable (x, w) batch
+    stream — block i is one fixed-size chunk batch (phantom-padded, so
+    one compiled step serves every block).  ``with_objective`` runs a
+    second pass over the stream for the final objective (mmap re-reads
+    when the factory reads a chunk cache, never re-parses); callers
+    that only consume the sketch — the `bigfcm_fit_store` combiner —
+    pass False and skip that whole scan (objective comes back NaN).
+    """
+    be = resolve_backend(backend)
+    v0 = jnp.asarray(init_centers, jnp.float32)
+    c = v0.shape[0]
+    step = _block_step(be, float(m), float(eps), int(max_iter),
+                       int(merge_max_iter))
+
+    v_prev, run_c = v0, v0
+    run_m = jnp.zeros((c,), jnp.float32)   # zero-mass phantom init summary
+    iters = jnp.int32(0)
+    saw = False
+    for bx, bw in batches_factory():
+        saw = True
+        v_prev, run_c, run_m, it = step(
+            jnp.asarray(bx, jnp.float32), jnp.asarray(bw, jnp.float32),
+            v_prev, run_c, run_m)
+        iters = iters + it
+    if not saw:
+        raise ValueError("wfcmpb_batches: empty batch stream")
+    if with_objective:
+        _, _, q = ooc_accumulate(batches_factory(), run_c, m, backend=be)
+    else:
+        q = jnp.float32(jnp.nan)       # explicitly not computed
+    return FCMResult(run_c, run_m, iters, q)
+
+
+def wfcmpb_store(
+    store,
+    init_centers: jax.Array,
+    *,
+    m: float = 2.0,
+    eps: float = 1e-6,
+    max_iter: int = 1000,
+    batch_rows: Optional[int] = None,
+    merge_max_iter: int = 200,
+    backend=None,
+    plan=None,
+    shard: int = 0,
+    with_objective: bool = True,
+) -> FCMResult:
+    """`wfcmpb` over a `ChunkStore` (out-of-core, single pass + one
+    objective pass).  ``batch_rows`` defaults to the store's chunk size
+    (block ≡ cache chunk); with a `repro.data.plane.PartitionPlan`,
+    only ``shard``'s chunks are read — the out-of-core combiner of
+    `bigfcm_fit_store`."""
+    from repro.data.plane import batched, shard_batches
+    rows = int(batch_rows or store.chunk_rows)
+    if plan is None:
+        factory = lambda: batched(store.iter_chunks(), rows)   # noqa: E731
+    else:
+        factory = lambda: shard_batches(store, plan, shard, rows)  # noqa: E731
+    return wfcmpb_batches(factory, init_centers, m=m, eps=eps,
+                          max_iter=max_iter, merge_max_iter=merge_max_iter,
+                          backend=backend, with_objective=with_objective)

@@ -1,0 +1,119 @@
+"""repro.data.plane — the partition plan over a `ChunkStore`.
+
+The Hadoop side of the paper has two tables: the node-local chunk cache
+(`repro.data.cache.ChunkStore`) and the job tracker's split→mapper
+assignment.  `PartitionPlan` is the second one: a deterministic map
+from cache chunks to mesh data-shards, with per-shard row counts for
+straggler accounting and an elastic `replan` when the mesh grows or
+shrinks.  Everything that fans a store out over shards — the
+out-of-core `bigfcm_fit` combiners, `ShardedLoader` epochs, benchmark
+sweeps — reads chunk order from a plan, never ad hoc.
+
+Planning is **deterministic**: chunks are placed by greedy
+longest-processing-time (rows descending, chunk index as tie-break)
+onto the currently-lightest shard (lowest shard id as tie-break).  The
+plan is therefore a pure function of (store chunking, n_shards) — two
+hosts planning the same store agree without coordination, and an
+elastic re-plan after a mesh change is just the same function at the
+new shard count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Iterable, Iterator, Tuple
+
+import numpy as np
+
+from .cache import ChunkStore, Rechunker
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPlan:
+    """chunk → shard assignment with per-shard row accounting."""
+    n_shards: int
+    assignment: Tuple[int, ...]   # chunk i lives on shard assignment[i]
+    shard_rows: Tuple[int, ...]   # rows per shard (straggler accounting)
+
+    def chunks_of(self, shard: int) -> Tuple[int, ...]:
+        """Chunk ids of one shard, in chunk (= row) order."""
+        if not 0 <= shard < self.n_shards:
+            raise IndexError(f"shard {shard} not in [0, {self.n_shards})")
+        return tuple(i for i, s in enumerate(self.assignment) if s == shard)
+
+    @property
+    def n_rows(self) -> int:
+        return sum(self.shard_rows)
+
+
+def plan_partitions(store: ChunkStore, n_shards: int) -> PartitionPlan:
+    """Deterministically map a store's chunks onto ``n_shards`` shards."""
+    if n_shards <= 0:
+        raise ValueError(f"n_shards must be positive, got {n_shards}")
+    order = sorted(range(store.n_chunks),
+                   key=lambda i: (-store.rows[i], i))
+    heap = [(0, s) for s in range(n_shards)]    # (load, shard id)
+    heapq.heapify(heap)
+    assignment = [0] * store.n_chunks
+    for i in order:
+        load, s = heapq.heappop(heap)
+        assignment[i] = s
+        heapq.heappush(heap, (load + store.rows[i], s))
+    shard_rows = [0] * n_shards
+    for i, s in enumerate(assignment):
+        shard_rows[s] += store.rows[i]
+    return PartitionPlan(n_shards, tuple(assignment), tuple(shard_rows))
+
+
+def replan(store: ChunkStore, plan: PartitionPlan, n_shards: int
+           ) -> Tuple[PartitionPlan, int]:
+    """Elastic re-plan after a mesh change: the same deterministic
+    placement at the new shard count.  Returns ``(new_plan, moved)``
+    where ``moved`` counts chunks whose shard changed — the data that
+    would migrate between node-local caches."""
+    new = plan_partitions(store, n_shards)
+    moved = sum(1 for a, b in zip(plan.assignment, new.assignment)
+                if a != b)
+    return new, moved
+
+
+def batched(chunks: Iterable[np.ndarray], batch_rows: int
+            ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    """Re-slice a chunk stream into fixed ``(batch_rows, d)`` batches
+    with per-row weights; the tail batch is padded with zero-weight
+    phantom rows (weight 0 ⇒ ignored by every accumulation).  This is
+    THE batcher — `ShardedLoader` epochs and the out-of-core sweeps
+    share it (and its `Rechunker` buffer is the same one `StoreWriter`
+    slices cache chunks with), so every consumer sees identical shapes
+    and padding."""
+    rc = Rechunker(batch_rows)
+    full_w = np.ones((batch_rows,), np.float32)
+    for chunk in chunks:
+        for batch in rc.push(np.asarray(chunk, np.float32)):
+            yield batch, full_w
+    tail = rc.tail()
+    if tail is not None:
+        n, dim = tail.shape
+        pad = batch_rows - n
+        yield (np.concatenate([tail, np.zeros((pad, dim), np.float32)]),
+               np.concatenate([np.ones((n,), np.float32),
+                               np.zeros((pad,), np.float32)]))
+
+
+def shard_batches(store: ChunkStore, plan: PartitionPlan, shard: int,
+                  batch_rows: int
+                  ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    """One shard's records as fixed-size phantom-padded (x, w) batches —
+    what an out-of-core combiner consumes, straight off the mmap."""
+    return batched((store.chunk(i) for i in plan.chunks_of(shard)),
+                   batch_rows)
+
+
+def as_store(data, *, chunk_rows: int = 8192, cache_dir=None,
+             transform=None) -> ChunkStore:
+    """Coerce an array / chunk iterable / ChunkStore into a ChunkStore
+    (pass-through when it already is one)."""
+    if isinstance(data, ChunkStore):
+        return data
+    return ChunkStore.ingest(data, chunk_rows=chunk_rows,
+                             cache_dir=cache_dir, transform=transform)

@@ -35,10 +35,12 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from typing import Callable, Iterable, Iterator, Optional, Sequence, Tuple
+from typing import (Callable, Iterable, Iterator, Optional, Sequence,
+                    Tuple, Union)
 
 import numpy as np
 
+from .cache import ChunkStore
 from .loader import ShardedLoader
 
 
@@ -101,17 +103,28 @@ def iterator_source(it: Iterable, *, chunk_rows: Optional[int] = None,
         yield (buf, tbuf) if timestamped else buf
 
 
-def replay_source(x: np.ndarray, chunk_rows: int, *, epochs: int = 1,
-                  shuffle: bool = False, seed: int = 0,
+def replay_source(x: Union[np.ndarray, ChunkStore], chunk_rows: int, *,
+                  epochs: int = 1, shuffle: bool = False, seed: int = 0,
                   timestamps: Optional[np.ndarray] = None) -> Iterator:
-    """Stream a materialized array in ``chunk_rows``-sized chunks.
+    """Stream a materialized array — or a cached `ChunkStore` — in
+    ``chunk_rows``-sized chunks.
 
-    ``epochs > 1`` replays the array (shuffled per epoch when asked) —
+    ``epochs > 1`` replays the data (shuffled per epoch when asked) —
     the backfill/regression-replay path of a streaming deployment.
-    ``timestamps`` ((n,) event times parallel to ``x``) turns the replay
-    into a timestamped source yielding ``(chunk, ts_chunk)`` pairs; the
-    pairing survives shuffling.
+    ``timestamps`` ((n,) event times parallel to the rows) turns the
+    replay into a timestamped source yielding ``(chunk, ts_chunk)``
+    pairs; the pairing survives shuffling.
+
+    A `ChunkStore` replays **out-of-core**: chunks stream off the mmap
+    instead of re-generating (or materializing) the dataset, and
+    ``shuffle`` becomes a block shuffle — chunk order and rows within
+    each chunk are permuted per epoch, rows never cross chunks.
     """
+    if isinstance(x, ChunkStore):
+        yield from _replay_store(x, chunk_rows, epochs=epochs,
+                                 shuffle=shuffle, seed=seed,
+                                 timestamps=timestamps)
+        return
     x = np.asarray(x, np.float32)
     ts = (None if timestamps is None
           else np.asarray(timestamps, np.float64).reshape(-1))
@@ -128,6 +141,38 @@ def replay_source(x: np.ndarray, chunk_rows: int, *, epochs: int = 1,
                 yield xe[i:i + chunk_rows]
             else:
                 yield xe[i:i + chunk_rows], te[i:i + chunk_rows]
+
+
+def _replay_store(store: ChunkStore, chunk_rows: int, *, epochs: int,
+                  shuffle: bool, seed: int,
+                  timestamps: Optional[np.ndarray]) -> Iterator:
+    """Replay a cached store chunk-by-chunk (see `replay_source`)."""
+    ts = (None if timestamps is None
+          else np.asarray(timestamps, np.float64).reshape(-1))
+    if ts is not None and ts.shape[0] != store.n_rows:
+        raise ValueError(f"timestamps length {ts.shape[0]} != records "
+                         f"{store.n_rows}")
+    rng = np.random.default_rng(seed)
+    for _ in range(epochs):
+        order = (rng.permutation(store.n_chunks) if shuffle
+                 else range(store.n_chunks))
+
+        def epoch_chunks():
+            for c in order:
+                x_c = np.asarray(store.chunk(int(c)), np.float32)
+                off = int(store.offsets[int(c)])
+                perm = (rng.permutation(x_c.shape[0]) if shuffle else None)
+                if perm is not None:
+                    x_c = x_c[perm]
+                if ts is None:
+                    yield x_c
+                else:
+                    t_c = ts[off:off + x_c.shape[0]]
+                    yield x_c, (t_c[perm] if perm is not None else t_c)
+
+        # one re-chunking pass per epoch, so each epoch ends with its
+        # own short tail (matching the materialized-array semantics)
+        yield from iterator_source(epoch_chunks(), chunk_rows=chunk_rows)
 
 
 def stamp_source(source: Iterator, *, start: float = 0.0,
@@ -282,7 +327,10 @@ def stream_loader(source: Iterator[np.ndarray], batch_rows: int, *,
                   = None) -> ShardedLoader:
     """Wrap any source in the batch pipeline's ``ShardedLoader`` so the
     stream gets the same prefetch thread, fixed-shape phantom-padded
-    batches, and mesh placement as offline data."""
+    batches, and mesh placement as offline data.  Streams are unbounded,
+    so the loader runs in ``cache=False`` pass-through mode — nothing
+    accretes into a chunk store (cache a stream explicitly with
+    `ChunkStore.ingest` over a bounded slice if replay is wanted)."""
     return ShardedLoader(source, batch_rows, mesh=mesh,
                          data_axes=data_axes, prefetch=prefetch,
-                         transform=transform)
+                         transform=transform, cache=False)

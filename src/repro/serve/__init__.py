@@ -1,5 +1,5 @@
-from .cluster import assign_stream, make_assigner
+from .cluster import assign_store, assign_stream, make_assigner
 from .decode import make_serve_step, make_prefill, greedy_generate
 
-__all__ = ["assign_stream", "make_assigner", "make_serve_step",
-           "make_prefill", "greedy_generate"]
+__all__ = ["assign_store", "assign_stream", "make_assigner",
+           "make_serve_step", "make_prefill", "greedy_generate"]

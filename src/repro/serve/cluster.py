@@ -11,6 +11,11 @@ read-only replicas (the fan-out tier: one learner, many scorers).  Both
 paths score through the active `repro.engine` sweep backend, so a
 replica deployed next to a TPU learner resolves the same implementation
 axis the learner uses.
+
+`assign_store` is the offline third shape: score an entire cached
+dataset (`repro.data.cache.ChunkStore`) chunk-by-chunk off the mmap —
+out-of-core batch scoring against a frozen snapshot, the "label the
+whole archive with tonight's model" job.
 """
 from __future__ import annotations
 
@@ -57,3 +62,16 @@ def assign_stream(model, source, *, soft: bool = False,
         x = np.asarray(x, np.float32)
         report = model.ingest(x, ts=ts) if update else None
         yield np.asarray(model.assign(x, soft=soft)), report
+
+
+def assign_store(store, centers, *, m: float = 2.0, soft: bool = False,
+                 backend=None) -> Iterator[np.ndarray]:
+    """Score every record of a `ChunkStore` against frozen ``centers``.
+
+    Yields one assignment array per cache chunk, in store row order —
+    out-of-core: only one chunk is resident at a time, so a store
+    larger than memory scores in O(chunk) space.  Concatenate the
+    yields for a (n_rows,) / (n_rows, C) result when it fits."""
+    fn = make_assigner(centers, m=m, soft=soft, backend=backend)
+    for chunk in store.iter_chunks():
+        yield np.asarray(fn(np.asarray(chunk, np.float32)))

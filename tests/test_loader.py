@@ -1,9 +1,13 @@
-"""Host-side record parsing (`repro.data.loader`)."""
+"""Host-side record parsing + `ShardedLoader` (`repro.data.loader`)."""
+import time
 import warnings
 
 import numpy as np
+import jax.numpy as jnp
+import pytest
 
-from repro.data import parse_records, normalize
+from repro.data import ChunkStore, ShardedLoader, parse_records, normalize
+from repro.engine import fcm_accumulate
 
 
 def test_parse_records_no_deprecation_warning():
@@ -23,3 +27,213 @@ def test_parse_records_custom_separator_and_normalize():
     np.testing.assert_allclose(got, [[1, 2], [3, 4]])
     norm = normalize(got)
     np.testing.assert_allclose(norm, [[0, 0], [1, 1]])
+
+
+def _parse_records_reference(lines, *, sep=","):
+    """The pre-vectorization per-line loop — the parity oracle."""
+    rows = []
+    for ln in lines:
+        if not ln.strip():
+            continue
+        toks = [t for t in ln.replace(" ", "").split(sep) if t]
+        rows.append(np.fromiter(map(float, toks), np.float32,
+                                count=len(toks)))
+    return np.stack(rows)
+
+
+def test_parse_records_vectorized_parity_and_speed():
+    rng = np.random.default_rng(0)
+    lines = [",".join(f"{v:.5f}" for v in row)
+             for row in rng.normal(size=(20_000, 12))]
+    lines[7] = " "                       # blank lines are skipped
+    lines[11] = "1 , 2,3," + ",".join("0" for _ in range(9))  # messy row
+    t0 = time.perf_counter()
+    ref = _parse_records_reference(lines)
+    t_ref = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    got = parse_records(lines)
+    t_new = time.perf_counter() - t0
+    assert got.dtype == ref.dtype and got.shape == ref.shape
+    np.testing.assert_array_equal(got, ref)
+    # speed sanity: the bulk split must beat the per-token float() loop
+    assert t_new < t_ref, (t_new, t_ref)
+
+
+def test_parse_records_ragged_raises():
+    with pytest.raises(ValueError):
+        parse_records(["1,2,3", "4,5"])
+    with pytest.raises(ValueError):
+        parse_records(["", "  "])
+
+
+def test_parse_records_comment_line_is_an_error_not_a_dropped_row():
+    """np.loadtxt's default comments='#' must stay disabled: a stray
+    header line is a parse error (as the float() loop raised), never a
+    silently lost row that skews store row counts."""
+    with pytest.raises(ValueError):
+        parse_records(["1,2", "# header", "3,4"])
+
+
+def test_concurrent_epoch_iterators_rejected_at_creation():
+    """The epoch claim is taken when iter() is called, not at first
+    next() — zip(loader, loader)-style double iteration must raise
+    instead of running two producer threads over duplicate batches."""
+    store = ChunkStore.ingest(np.ones((100, 2), np.float32), chunk_rows=16)
+    loader = ShardedLoader(store, batch_rows=16)
+    it1 = iter(loader)
+    with pytest.raises(RuntimeError, match="in flight"):
+        iter(loader)
+    assert sum(float(w.sum()) for _, w in it1) == 100.0
+    assert sum(float(w.sum()) for _, w in loader) == 100.0  # released
+
+
+def test_discarded_unstarted_iterator_releases_the_epoch_claim():
+    """zip(loader, loader) raises on the second iter(); the first,
+    never-started iterator must release its claim when discarded, not
+    wedge the loader for the rest of the process."""
+    store = ChunkStore.ingest(np.ones((64, 2), np.float32), chunk_rows=16)
+    loader = ShardedLoader(store, batch_rows=16, resident_bytes=0)
+    with pytest.raises(RuntimeError, match="in flight"):
+        zip(loader, loader)
+    assert sum(float(w.sum()) for _, w in loader) == 64.0  # not wedged
+
+
+def test_reshard_mid_resident_replay_replaces_remaining_batches():
+    """A reshard landing mid device-resident replay re-places the rest
+    of the snapshot for the new mesh instead of serving stale
+    placements."""
+    import jax
+    from jax.sharding import Mesh
+
+    x = np.arange(512 * 3, dtype=np.float32).reshape(512, 3)
+    loader = ShardedLoader(ChunkStore.ingest(x, chunk_rows=64),
+                           batch_rows=64,
+                           mesh=Mesh(np.array(jax.devices()[:1]), ("data",)))
+    assert sum(float(w.sum()) for _, w in loader) == 512.0
+    assert loader.resident
+    total, got = 0.0, []
+    for i, (bx, bw) in enumerate(loader):
+        if i == 2:
+            loader.reshard(Mesh(np.array(jax.devices()[:1]), ("data",)),
+                           ("data",))
+        total += float(bw.sum())
+        got.append(np.asarray(bx))
+    assert total == 512.0
+    np.testing.assert_array_equal(np.concatenate(got), x)
+
+
+def test_in_memory_ingest_cap_fails_loudly():
+    """A larger-than-RAM source without a cache_dir must raise a clear
+    MemoryError during ingest, not silently accrete host memory."""
+    def endless():
+        while True:
+            yield np.zeros((1024, 8), np.float32)
+
+    loader = ShardedLoader(endless(), batch_rows=1024,
+                           ingest_limit_bytes=1 << 20)
+    with pytest.raises(MemoryError, match="cache_dir"):
+        for _ in loader:
+            pass
+
+
+def test_abandoned_epoch_retires_producer_thread():
+    """Breaking out of an epoch must stop the producer thread instead
+    of leaking it blocked on the bounded queue."""
+    rng = np.random.default_rng(4)
+    store = ChunkStore.ingest(rng.normal(size=(4000, 3)).astype(np.float32),
+                              chunk_rows=64)
+    loader = ShardedLoader(store, batch_rows=64, prefetch=1,
+                           resident_bytes=0)
+    for _ in loader:
+        break                       # abandon with the queue full
+    loader._pump_thread.join(timeout=5.0)
+    assert not loader._pump_thread.is_alive()
+    # the loader stays usable: a fresh epoch sees every record
+    assert sum(float(w.sum()) for _, w in loader) == 4000.0
+
+
+def test_poisoned_source_raises_in_consumer():
+    """Regression: a source exception used to die in the daemon
+    producer thread, leaving the consumer blocked on the queue forever;
+    it must propagate through the queue and re-raise in __iter__."""
+    def poisoned():
+        yield np.ones((10, 3), np.float32)
+        raise RuntimeError("upstream parse failure")
+
+    loader = ShardedLoader(poisoned(), batch_rows=4)
+    with pytest.raises(RuntimeError, match="upstream parse failure"):
+        list(loader)
+
+
+def test_tail_padding_phantoms_ignored_by_accumulation():
+    """Phantom zero-weight rows contribute nothing: accumulating over
+    the padded batches equals accumulating over the raw records."""
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(70, 3)).astype(np.float32)
+    v = jnp.asarray(x[:4])
+    loader = ShardedLoader(iter([x]), batch_rows=32)
+    batches = list(loader)
+    assert len(batches) == 3
+    bx, bw = batches[-1]
+    assert bx.shape == (32, 3) and float(bw.sum()) == 70 - 64
+    tot = None
+    for bx, bw in batches:
+        part = fcm_accumulate(bx, bw, v, 2.0)
+        tot = part if tot is None else tuple(a + b
+                                             for a, b in zip(tot, part))
+    ref = fcm_accumulate(jnp.asarray(x), jnp.ones((70,), np.float32),
+                         v, 2.0)
+    for a, b in zip(tot, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+def test_reiterable_epochs_from_one_shot_source():
+    """The loader is a view over its ChunkStore: a one-shot generator
+    source still supports many identical epochs (epoch 2+ never touches
+    the source), and a small store goes device-resident."""
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(1000, 4)).astype(np.float32)
+    loader = ShardedLoader(iter([x[:700], x[700:]]), batch_rows=96)
+    e1 = [(np.asarray(a), np.asarray(w)) for a, w in loader]
+    assert loader.store is not None and loader.store.n_rows == 1000
+    assert loader.resident                # fits under resident_bytes
+    e2 = [(np.asarray(a), np.asarray(w)) for a, w in loader]
+    assert len(e1) == len(e2) == -(-1000 // 96)
+    for (a1, w1), (a2, w2) in zip(e1, e2):
+        np.testing.assert_array_equal(a1, a2)
+        np.testing.assert_array_equal(w1, w2)
+
+
+def test_streaming_mode_is_single_use_and_uncached():
+    loader = ShardedLoader(iter([np.ones((8, 2), np.float32)]),
+                           batch_rows=4, cache=False)
+    assert len(list(loader)) == 2
+    assert loader.store is None
+    with pytest.raises(RuntimeError, match="single-use"):
+        list(loader)
+
+
+def test_reshard_mid_epoch_keeps_row_counts_exact():
+    """Elastic mesh change mid-epoch: remaining batches land on the new
+    mesh, no record is dropped or double-counted, and the device-
+    resident cache is invalidated (it was placed for the old mesh)."""
+    import jax
+    from jax.sharding import Mesh
+
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(500, 3)).astype(np.float32)
+    store = ChunkStore.ingest(x, chunk_rows=64)
+    mesh_a = Mesh(np.array(jax.devices()[:1]), ("data",))
+    mesh_b = Mesh(np.array(jax.devices()[:1]), ("data",))
+    loader = ShardedLoader(store, batch_rows=64, mesh=mesh_a)
+    total, n_batches = 0.0, 0
+    for i, (bx, bw) in enumerate(loader):
+        if i == 3:
+            loader.reshard(mesh_b, ("data",))
+        total += float(bw.sum())
+        n_batches += 1
+    assert total == 500.0                       # exact global row count
+    assert n_batches == -(-500 // 64)
+    assert not loader.resident                  # cache dropped on reshard
+    # next epoch re-places everything on the new mesh, same totals
+    assert sum(float(w.sum()) for _, w in loader) == 500.0

@@ -1,0 +1,307 @@
+"""Data plane (PR 5): ChunkStore cache, PartitionPlan, and the
+out-of-core fit paths that read through them."""
+import os
+import time
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.baselines import mr_fuzzy_kmeans, mr_fuzzy_kmeans_store
+from repro.core import (BigFCMConfig, bigfcm_fit, bigfcm_fit_store,
+                        wfcmpb, wfcmpb_store)
+from repro.data import (CacheInvalid, ChunkStore, ShardedLoader,
+                        make_blobs, parse_records, plan_partitions, replan,
+                        replay_source, shard_batches)
+from repro.engine import fcm_accumulate
+from repro.serve import assign_store, make_assigner
+
+
+@pytest.fixture(scope="module")
+def blob_store(tmp_path_factory):
+    """8192×8 blobs spilled to an on-disk store in 1024-row chunks —
+    total rows exceed the 1024-row device batch by 8× (the out-of-core
+    acceptance shape)."""
+    x, _ = make_blobs(8192, 8, 5, seed=3)
+    x = x.astype(np.float32)
+    d = tmp_path_factory.mktemp("chunk_cache")
+    store = ChunkStore.ingest(
+        iter([x[i:i + 1000] for i in range(0, 8192, 1000)]),
+        chunk_rows=1024, cache_dir=str(d))
+    return x, store
+
+
+# ----------------------------------------------------------- ChunkStore ---
+
+def test_chunkstore_roundtrip_take_and_hash(tmp_path):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(1000, 5)).astype(np.float32)
+    s = ChunkStore.ingest(iter([x[:300], x[300:]]), chunk_rows=128,
+                          cache_dir=str(tmp_path))
+    assert (s.n_rows, s.dim, s.n_chunks) == (1000, 5, 8)
+    assert s.rows[-1] == 1000 - 7 * 128           # short tail chunk
+    reopened = ChunkStore.open(str(tmp_path))
+    np.testing.assert_array_equal(reopened.materialize(), x)
+    idx = rng.integers(0, 1000, 37)
+    np.testing.assert_array_equal(reopened.take(idx), x[idx])
+    assert reopened.verify()
+    # the content hash identifies the DATA, not the chunking
+    assert ChunkStore.ingest(x, chunk_rows=333).content_hash \
+        == s.content_hash
+    assert ChunkStore.ingest(x[::-1].copy(),
+                             chunk_rows=333).content_hash \
+        != s.content_hash
+
+
+def test_chunkstore_invalidation_rules(tmp_path):
+    x = np.ones((100, 3), np.float32)
+    s = ChunkStore.ingest(x, chunk_rows=40, cache_dir=str(tmp_path))
+    # 1. no manifest (interrupted ingest) ⇒ invalid
+    os.remove(tmp_path / "manifest.json")
+    with pytest.raises(CacheInvalid):
+        ChunkStore.open(str(tmp_path))
+    # 2. manifest/chunk shape mismatch ⇒ invalid
+    s = ChunkStore.ingest(x, chunk_rows=40, cache_dir=str(tmp_path))
+    np.save(tmp_path / "chunk_000001.npy", np.ones((7, 3), np.float32))
+    with pytest.raises(CacheInvalid):
+        ChunkStore.open(str(tmp_path))
+    # 3. same shape but corrupted bytes ⇒ open succeeds, verify() fails
+    s = ChunkStore.ingest(x, chunk_rows=40, cache_dir=str(tmp_path))
+    bad = np.asarray(s.chunk(1)).copy()
+    bad[0, 0] += 1.0
+    np.save(tmp_path / "chunk_000001.npy", bad)
+    assert not ChunkStore.open(str(tmp_path)).verify()
+
+
+def test_open_or_ingest_skips_source_on_warm_cache(tmp_path):
+    x = np.arange(60, dtype=np.float32).reshape(20, 3)
+    cold = ChunkStore.open_or_ingest(str(tmp_path), lambda: iter([x]),
+                                     chunk_rows=8)
+    assert cold.n_rows == 20
+
+    def exploding():
+        raise AssertionError("warm start must not re-read the source")
+
+    warm = ChunkStore.open_or_ingest(str(tmp_path), exploding, chunk_rows=8)
+    assert warm.content_hash == cold.content_hash
+    np.testing.assert_array_equal(warm.materialize(), x)
+    # a different chunk_rows request, or a content-hash pin that does
+    # not match the cached data, re-ingests instead of serving stale
+    rechunked = ChunkStore.open_or_ingest(str(tmp_path), lambda: iter([x]),
+                                          chunk_rows=5)
+    assert rechunked.chunk_rows == 5 and rechunked.n_rows == 20
+    y = x + 1.0
+    repinned = ChunkStore.open_or_ingest(
+        str(tmp_path), lambda: iter([y]), chunk_rows=5,
+        expected_hash=ChunkStore.ingest(y, chunk_rows=5).content_hash)
+    np.testing.assert_array_equal(repinned.materialize(), y)
+
+
+def test_empty_source_rejected():
+    with pytest.raises(ValueError):
+        ChunkStore.ingest(iter([]))
+
+
+# -------------------------------------------------------- PartitionPlan ---
+
+def test_partition_plan_deterministic_balanced_and_complete(blob_store):
+    _, store = blob_store
+    plan = plan_partitions(store, 3)
+    assert plan == plan_partitions(store, 3)          # deterministic
+    assert sum(plan.shard_rows) == store.n_rows       # exact accounting
+    covered = sorted(sum((plan.chunks_of(s) for s in range(3)), ()))
+    assert covered == list(range(store.n_chunks))     # every chunk once
+    assert max(plan.shard_rows) - min(plan.shard_rows) \
+        <= max(store.rows)                            # LPT balance bound
+
+
+def test_replan_elastic(blob_store):
+    _, store = blob_store
+    plan = plan_partitions(store, 2)
+    grown, moved = replan(store, plan, 4)
+    assert grown.n_shards == 4
+    assert sum(grown.shard_rows) == store.n_rows      # no rows lost
+    assert 0 < moved <= store.n_chunks                # some chunks migrate
+
+
+def test_shard_batches_phantoms_ignored_by_accumulation(blob_store):
+    x, store = blob_store
+    plan = plan_partitions(store, 3)
+    v = jnp.asarray(x[:5])
+    # batch size that does NOT divide the shard rows ⇒ padded tails
+    total = None
+    rows_seen = 0.0
+    for s in range(3):
+        for bx, bw in shard_batches(store, plan, s, 700):
+            vn, wi, qi = fcm_accumulate(jnp.asarray(bx), jnp.asarray(bw),
+                                        v, 2.0)
+            total = (vn, wi, qi) if total is None else (
+                total[0] + vn, total[1] + wi, total[2] + qi)
+            rows_seen += float(bw.sum())
+    assert rows_seen == store.n_rows                  # exact row counts
+    ref = fcm_accumulate(jnp.asarray(x),
+                         jnp.ones((x.shape[0],), np.float32), v, 2.0)
+    np.testing.assert_allclose(np.asarray(total[0]), np.asarray(ref[0]),
+                               rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(total[1]), np.asarray(ref[1]),
+                               rtol=2e-5)
+    np.testing.assert_allclose(float(total[2]), float(ref[2]), rtol=2e-5)
+
+
+# ---------------------------------------------------- out-of-core fits ---
+
+def test_out_of_core_bigfcm_matches_in_memory(blob_store):
+    """ACCEPTANCE: store rows exceed batch_rows 8×; the multi-pass
+    out-of-core fit matches the in-memory fit within 1e-5 relative
+    objective (same seeds ⇒ same driver sample via store.take)."""
+    x, store = blob_store
+    cfg = BigFCMConfig(n_clusters=5, use_driver=False, sample_size=512,
+                       seed=0, backend="jnp")
+    ref = bigfcm_fit(jnp.asarray(x), cfg)
+    got = bigfcm_fit(store, cfg)          # ChunkStore dispatch, 1 shard
+    rel = abs(float(got.objective) - float(ref.objective)) \
+        / abs(float(ref.objective))
+    assert rel <= 1e-5, rel
+    np.testing.assert_allclose(np.asarray(got.centers),
+                               np.asarray(ref.centers), atol=1e-3)
+
+
+def test_out_of_core_bigfcm_multi_shard(blob_store):
+    x, store = blob_store
+    cfg = BigFCMConfig(n_clusters=5, use_driver=False, sample_size=512,
+                       seed=0, backend="jnp")
+    ref = bigfcm_fit(jnp.asarray(x), cfg)
+    got = bigfcm_fit_store(store, cfg, n_shards=4)
+    assert np.asarray(got.diagnostics.combiner_iters).shape == (4,)
+
+    def global_q(v):
+        _, _, q = fcm_accumulate(
+            jnp.asarray(x), jnp.ones((x.shape[0],), np.float32),
+            jnp.asarray(v), cfg.m)
+        return float(q)
+
+    q_ref, q_got = global_q(ref.centers), global_q(got.centers)
+    assert abs(q_got - q_ref) / q_ref < 0.05
+
+
+def test_bigfcm_store_more_shards_than_chunks(blob_store):
+    """n_shards beyond the chunk count must clamp to non-empty
+    combiners, not crash on an empty batch stream."""
+    _, store = blob_store
+    cfg = BigFCMConfig(n_clusters=5, use_driver=False, sample_size=256,
+                       seed=0, backend="jnp", combiner_eps=1e-6,
+                       max_iter=60)
+    res = bigfcm_fit_store(store, cfg, n_shards=store.n_chunks + 5)
+    assert np.asarray(res.diagnostics.combiner_iters).shape \
+        == (store.n_chunks,)
+    assert np.isfinite(float(res.objective))
+
+
+def test_store_driver_sample_is_o_lambda_for_huge_row_counts():
+    """Beyond the device cutoff the Parker–Hall sample is drawn
+    host-side in O(λ): distinct, in range, deterministic per key."""
+    import jax
+    from repro.core.bigfcm import _DEVICE_SAMPLE_ROWS, _sample_rows
+
+    n = _DEVICE_SAMPLE_ROWS * 32          # would be GBs of device keys
+    idx = _sample_rows(jax.random.PRNGKey(7), n, 512)
+    assert idx.shape == (512,)
+    assert len(np.unique(idx)) == 512
+    assert idx.min() >= 0 and idx.max() < n
+    np.testing.assert_array_equal(
+        idx, _sample_rows(jax.random.PRNGKey(7), n, 512))
+
+
+def test_bigfcm_store_rejects_mesh_args(blob_store):
+    _, store = blob_store
+    cfg = BigFCMConfig(n_clusters=5)
+    with pytest.raises(ValueError):
+        bigfcm_fit(store, cfg, point_weights=jnp.ones((store.n_rows,)))
+
+
+def test_wfcmpb_store_matches_in_memory(blob_store):
+    x, store = blob_store
+    v0 = jnp.asarray(x[:5])
+    ref = wfcmpb(jnp.asarray(x), v0, m=2.0, eps=1e-6, max_iter=200,
+                 block_size=1024, backend="jnp")
+    got = wfcmpb_store(store, v0, m=2.0, eps=1e-6, max_iter=200,
+                       batch_rows=1024, backend="jnp")
+    assert int(got.n_iter) == int(ref.n_iter)
+    rel = abs(float(got.objective) - float(ref.objective)) \
+        / abs(float(ref.objective))
+    assert rel <= 1e-4, rel
+
+
+def test_mr_fkm_store_matches_in_memory(blob_store):
+    x, store = blob_store
+    v0 = jnp.asarray(x[:5])
+    ref, jobs_ref, _ = mr_fuzzy_kmeans(jnp.asarray(x), v0, m=2.0,
+                                       eps=1e-6, max_iter=60)
+    got, jobs_got, _ = mr_fuzzy_kmeans_store(store, v0, m=2.0, eps=1e-6,
+                                             max_iter=60)
+    assert jobs_ref == jobs_got
+    np.testing.assert_allclose(np.asarray(got.centers),
+                               np.asarray(ref.centers), atol=1e-4)
+
+
+def test_assign_store_matches_direct(blob_store):
+    x, store = blob_store
+    v = jnp.asarray(x[:5])
+    ooc = np.concatenate(list(assign_store(store, v)))
+    direct = np.asarray(make_assigner(v)(x))
+    np.testing.assert_array_equal(ooc, direct)
+    soft = np.concatenate(list(assign_store(store, v, soft=True)))
+    np.testing.assert_allclose(
+        soft, np.asarray(make_assigner(v, soft=True)(x)), atol=1e-6)
+
+
+# -------------------------------------------------- stream replay + warm ---
+
+def test_replay_source_from_store_matches_array(blob_store):
+    x, store = blob_store
+    a = list(replay_source(x, 700, epochs=2))
+    b = list(replay_source(store, 700, epochs=2))
+    assert len(a) == len(b)
+    for ca, cb in zip(a, b):
+        np.testing.assert_array_equal(ca, cb)
+
+
+def test_replay_source_store_shuffle_preserves_rows_and_ts(blob_store):
+    x, store = blob_store
+    ts = np.arange(store.n_rows, dtype=np.float64)
+    got_x, got_ts = [], []
+    for cx, cts in replay_source(store, 600, shuffle=True, seed=2,
+                                 timestamps=ts):
+        got_x.append(cx)
+        got_ts.append(cts)
+    got_x, got_ts = np.concatenate(got_x), np.concatenate(got_ts)
+    assert got_x.shape == x.shape
+    # the (row, timestamp) pairing survives the block shuffle
+    np.testing.assert_array_equal(got_x, x[got_ts.astype(np.int64)])
+    assert not np.array_equal(got_ts, ts)             # actually shuffled
+
+
+def test_warm_epoch_skips_parsing_and_is_faster(tmp_path):
+    """Second epoch streams the mmap cache — no parse — and is faster
+    than the cold parse epoch (the bench records the full ratio)."""
+    rng = np.random.default_rng(0)
+    lines = [",".join(f"{v:.6f}" for v in row)
+             for row in rng.normal(size=(60_000, 16))]
+
+    def line_chunks():
+        for i in range(0, len(lines), 4096):
+            yield parse_records(lines[i:i + 4096])
+
+    loader = ShardedLoader(line_chunks(), batch_rows=4096,
+                           cache_dir=str(tmp_path), resident_bytes=0)
+    t0 = time.perf_counter()
+    cold_rows = sum(float(w.sum()) for _, w in loader)
+    t_cold = time.perf_counter() - t0
+    assert cold_rows == 60_000
+    assert loader.store is not None and loader.store.cache_dir is not None
+    t0 = time.perf_counter()
+    warm_rows = sum(float(w.sum()) for _, w in loader)
+    t_warm = time.perf_counter() - t0
+    assert warm_rows == cold_rows
+    assert not loader.resident                 # resident_bytes=0 ⇒ mmap path
+    assert t_warm < t_cold, (t_warm, t_cold)
