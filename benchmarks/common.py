@@ -3,22 +3,58 @@
 The paper's absolute numbers come from a 2016 Hadoop cluster; this
 harness validates the paper's *relative* claims on CPU-budget-scaled
 record counts (documented per table in EXPERIMENTS.md).  Output format:
-``name,us_per_call,derived`` CSV rows.
+``name,us_per_call,derived`` CSV rows, plus a structured row dict per
+emit (``ROWS_META``) tagged with platform/backend/interpret metadata —
+cross-machine perf-trajectory comparisons filter on those fields, never
+on free-text ``derived`` strings.
 """
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 
 ROWS = []
+ROWS_META = []
 
 
-def emit(name: str, us_per_call: float, derived: str = ""):
+def on_interpret(backend_name: str) -> Optional[bool]:
+    """Whether a named sweep backend runs its kernel in interpret mode
+    on this host: True/False for the Pallas backends, None (not
+    applicable) for the pure-jnp ones."""
+    if not backend_name.startswith("pallas"):
+        return None
+    return jax.default_backend() != "tpu"
+
+
+def emit(name: str, us_per_call: float, derived: str = "", *,
+         backend: Optional[str] = None, interpret: Optional[bool] = None,
+         **extra) -> dict:
+    """Print/record one benchmark row.
+
+    The CSV line keeps the historical 3-column format; the returned
+    dict (also appended to ``ROWS_META``) carries the structured
+    metadata — ``platform`` always, ``backend``/``interpret`` when the
+    caller passes them (pass ``backend=`` whenever a row is
+    backend-specific; ``interpret`` defaults from `on_interpret`).
+    Benches that write a ``BENCH_*.json`` should store these dicts as
+    their rows.
+    """
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+    meta = {"name": name, "us_per_call": round(us_per_call, 1),
+            "derived": derived, "platform": jax.default_backend()}
+    if backend is not None:
+        meta["backend"] = backend
+        if interpret is None:
+            interpret = on_interpret(backend)
+    if interpret is not None:
+        meta["interpret"] = bool(interpret)
+    meta.update(extra)
+    ROWS_META.append(meta)
+    return meta
 
 
 def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

@@ -1,6 +1,13 @@
-"""Render the §Roofline table (EXPERIMENTS.md) from results/dryrun/*.json.
+"""Render roofline tables — both halves of the PR-6 unified layer.
+
+Dry-run artifacts (LM step programs, results/dryrun/*.json):
 
     PYTHONPATH=src python -m benchmarks.roofline_table [--dir results/dryrun]
+
+Measured sweep roofline (`repro.perf`, benchmarks/BENCH_roofline.json):
+
+    PYTHONPATH=src python -m benchmarks.roofline_table \
+        --bench benchmarks/BENCH_roofline.json
 """
 from __future__ import annotations
 
@@ -56,12 +63,51 @@ def render(recs, mesh_filter="16x16"):
     return "\n".join(rows)
 
 
+def render_bench(path):
+    """Achieved-vs-peak table from BENCH_roofline.json rows."""
+    with open(path) as fh:
+        bench = json.load(fh)
+    p = bench["peaks"]
+    rows = [f"probed peaks: {p['stream_bytes_per_s'] / 1e9:.2f} GB/s "
+            f"stream, {p['matmul_f32_flops_per_s'] / 1e9:.1f} GFLOP/s "
+            f"f32, {p['matmul_bf16_flops_per_s'] / 1e9:.1f} GFLOP/s "
+            f"bf16" + ("  [SMOKE]" if bench.get("smoke") else ""), ""]
+    rows.append("| backend | shape | t | GFLOP/s | %peak | GB/s | %peak"
+                " | bound | %bound |")
+    rows.append("|" + "---|" * 9)
+    for r in bench["rows"]:
+        shape = f"{r['n']}×{r['c']}×{r['d']}"
+        if "error" in r:
+            rows.append(f"| {r['backend']} | {shape} | ERROR | | | | | "
+                        f"| |")
+            continue
+        rows.append(
+            f"| {r['backend']} | {shape} | {fmt_t(r['seconds'])} | "
+            f"{r['achieved_flops_per_s'] / 1e9:.2f} | "
+            f"{r['frac_of_peak_flops']:.1%} | "
+            f"{r['achieved_bytes_per_s'] / 1e9:.2f} | "
+            f"{r['frac_of_peak_bw']:.1%} | {r['bound']} | "
+            f"{r['frac_of_bound']:.1%} |")
+    for key, c in bench.get("calibration", {}).items():
+        rows.append(f"auto[{key}] → {c['winner']}  (" + ", ".join(
+            f"{k}: {v:.0f}us" for k, v in c["times_us"].items()) + ")")
+    for key, t in bench.get("tiles", {}).items():
+        rows.append(f"tiles[{key}] → tile_n={t['tile_n']} "
+                    f"lane={t['lane']}")
+    return "\n".join(rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--bench", default=None,
+                    help="render a BENCH_roofline.json instead")
     args = ap.parse_args()
-    print(render(load(args.dir), args.mesh))
+    if args.bench:
+        print(render_bench(args.bench))
+    else:
+        print(render(load(args.dir), args.mesh))
 
 
 if __name__ == "__main__":

@@ -11,13 +11,16 @@ import time
 
 TABLES = ["t2_driver_epsilon", "t3_epsilon_methods", "t4_datasize",
           "t5_clusters", "t6_datasets", "t7_accuracy", "t8_silhouette",
-          "t9_kernel", "t10_stream", "t11_engine", "t12_cache"]
+          "t9_kernel", "t10_stream", "t11_engine", "t12_cache",
+          "t13_roofline"]
 
 
 def main() -> None:
     args = [a for a in sys.argv[1:] if not a.startswith("-")]
     tables = args or TABLES
-    from .common import ROWS, emit
+    import json
+
+    from .common import ROWS, ROWS_META, emit
     print("name,us_per_call,derived")
     for t in tables:
         mod = importlib.import_module(f"benchmarks.{t}")
@@ -27,6 +30,9 @@ def main() -> None:
     with open("benchmarks/results.csv", "w") as f:
         f.write("name,us_per_call,derived\n")
         f.write("\n".join(ROWS) + "\n")
+    # the same rows with structured platform/backend/interpret metadata
+    with open("benchmarks/results_meta.json", "w") as f:
+        json.dump(ROWS_META, f, indent=1)
 
 
 if __name__ == "__main__":

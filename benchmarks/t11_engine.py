@@ -1,8 +1,8 @@
 """Engine benchmark (PR 3, `repro.engine`): backend × workload matrix.
 
 Writes ``benchmarks/BENCH_engine.json``: records/sec for every
-registered sweep backend (``jnp`` / ``pallas`` / ``pallas_accumulate``)
-across the three merge-topology consumers —
+registered sweep backend (``jnp`` / ``jnp_bf16`` / ``pallas`` /
+``pallas_accumulate``) across the three merge-topology consumers —
 
   * **batch**  — one accumulation sweep over a record block (the
     combiner hot loop; the number every other mode is bounded by);
@@ -35,17 +35,18 @@ from repro.stream import window_summary
 
 from .common import emit, timeit
 
-BACKENDS = ["jnp", "pallas", "pallas_accumulate"]
+BACKENDS = ["jnp", "jnp_bf16", "pallas", "pallas_accumulate"]
 N_BATCH, D, C = 16_384, 16, 8
 N_PB, BLOCK = 4_096, 1_024
 WINDOW = 8
 ROWS_JSON = []
 
 
-def _emit(name: str, us_per_call: float, derived: str = ""):
-    emit(name, us_per_call, derived)
-    ROWS_JSON.append({"name": name, "us_per_call": round(us_per_call, 1),
-                      "derived": derived})
+def _emit(name: str, us_per_call: float, derived: str = "", *,
+          backend: str = None):
+    # rows carry structured platform/backend/interpret metadata (PR 6
+    # satellite) — the "(interpret)" hint in `derived` is for humans only
+    ROWS_JSON.append(emit(name, us_per_call, derived, backend=backend))
 
 
 def run() -> None:
@@ -64,7 +65,7 @@ def run() -> None:
         "cpu" else ""
     for name in BACKENDS:
         be = get_backend(name)
-        tag = "" if name == "jnp" else interp
+        tag = interp if name.startswith("pallas") else ""
 
         # jit each workload exactly as its consumer deploys it (the
         # driver jits fcm/wfcmpb, StreamingBigFCM jits the window merge),
@@ -72,7 +73,7 @@ def run() -> None:
         t = timeit(jax.jit(lambda a, b, q: be.sweep(a, b, q, 2.0)),
                    x, w, v)
         _emit(f"t11/{name}/batch_sweep", t * 1e6,
-              f"{N_BATCH / t:.0f} records/sec{tag}")
+              f"{N_BATCH / t:.0f} records/sec{tag}", backend=name)
 
         t = timeit(jax.jit(lambda a, q: wfcmpb(a, q, m=2.0, eps=1e-4,
                                                max_iter=20,
@@ -81,14 +82,14 @@ def run() -> None:
                                                backend=be)),
                    x[:N_PB], v)
         _emit(f"t11/{name}/wfcmpb", t * 1e6,
-              f"{N_PB / t:.0f} records/sec{tag}")
+              f"{N_PB / t:.0f} records/sec{tag}", backend=name)
 
         t = timeit(jax.jit(lambda s: merge_summaries(s, plan,
                                                      backend=be).summary),
                    win)
         _emit(f"t11/{name}/stream_window_merge", t * 1e6,
               f"W={WINDOW} C={C}: {WINDOW * C / t:.0f} sketch pts/sec"
-              f"{tag}")
+              f"{tag}", backend=name)
 
     out = os.path.join(os.path.dirname(__file__), "BENCH_engine.json")
     with open(out, "w") as f:

@@ -1,0 +1,99 @@
+"""Roofline + calibration benchmark (PR 6, `repro.perf`).
+
+Writes ``benchmarks/BENCH_roofline.json``:
+
+  * **peaks** — the machine's probed streaming bandwidth and matmul
+    FLOPs/s (f32 and bf16), ERT-style best-of-ladder;
+  * **rows** — achieved bytes/s and FLOPs/s vs those peaks for EVERY
+    registered sweep backend × a shape ladder (small-C memory-ish
+    shape and a larger-C compute-bound one), each row carrying the
+    analytic intensity, the roofline bound, and the fraction of the
+    bound actually reached;
+  * **calibration** — the measured auto-selection result per raced
+    bucket (winner + per-backend times + parity verdicts), i.e. what
+    ``resolve_backend("auto")`` will answer on this machine;
+  * **tiles** — the autotuned Pallas block config per bucket.
+
+Smoke mode (``REPRO_PERF_SMOKE=1``, used by ``scripts/verify.sh
+perf``): tiny shapes, 1 repetition, small probe ladders — exercises
+the whole measurement path in seconds without pretending the numbers
+mean anything (the JSON records ``"smoke": true``).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.perf.autotune import tune_sweep_blocks
+from repro.perf.calibrate import (bucket_key, calibrated_backend_name,
+                                  load_calibration, shape_bucket)
+from repro.perf.microbench import probe_peaks
+from repro.perf.roofline import roofline_report
+
+from .common import emit
+
+SMOKE = os.environ.get("REPRO_PERF_SMOKE", "") not in ("", "0")
+
+# small-C (memory-leaning) and large-C (compute-bound: intensity ≈ C)
+SHAPES = [(4096, 8, 16), (4096, 128, 64)] if not SMOKE else [(512, 4, 8)]
+ITERS = 1 if SMOKE else 3
+
+
+def run() -> None:
+    peaks = probe_peaks(iters=ITERS) if not SMOKE else probe_peaks(
+        stream_floats=(1 << 18,), matmul_ns=(128,), iters=1)
+    emit("t13/peak/stream", 0.0,
+         f"{peaks['stream_bytes_per_s'] / 1e9:.2f} GB/s")
+    emit("t13/peak/matmul_f32", 0.0,
+         f"{peaks['matmul_f32_flops_per_s'] / 1e9:.1f} GFLOP/s")
+    emit("t13/peak/matmul_bf16", 0.0,
+         f"{peaks['matmul_bf16_flops_per_s'] / 1e9:.1f} GFLOP/s")
+
+    report = roofline_report(SHAPES, peaks=peaks, iters=ITERS)
+    for r in report["rows"]:
+        shape = f"n{r['n']}_c{r['c']}_d{r['d']}"
+        if "error" in r:
+            emit(f"t13/{r['backend']}/{shape}", float("nan"),
+                 r["error"], backend=r["backend"])
+            continue
+        emit(f"t13/{r['backend']}/{shape}", r["seconds"] * 1e6,
+             f"{r['achieved_flops_per_s'] / 1e9:.2f} GFLOP/s "
+             f"({r['frac_of_peak_flops']:.1%} of peak), "
+             f"{r['achieved_bytes_per_s'] / 1e9:.2f} GB/s "
+             f"({r['frac_of_peak_bw']:.1%}), {r['bound']}-bound, "
+             f"{r['frac_of_bound']:.1%} of roofline",
+             backend=r["backend"])
+
+    # measured auto-selection + block autotune, per benched shape bucket
+    calibration, tiles = {}, {}
+    for shape in SHAPES:
+        key = bucket_key(shape_bucket(*shape))
+        winner = calibrated_backend_name(shape, refresh=True)
+        entry = load_calibration()["winners"][key]
+        calibration[key] = entry
+        emit(f"t13/auto/{key}", 0.0,
+             f"winner={winner} " + " ".join(
+                 f"{k}={v:.0f}us" for k, v in entry["times_us"].items()),
+             backend=winner)
+        cfg = tune_sweep_blocks(shape, iters=ITERS, refresh=True,
+                                **({"tiles": (256, 512)} if SMOKE else {}))
+        tiles[key] = cfg
+        emit(f"t13/tile/{key}", 0.0,
+             f"tile_n={cfg['tile_n']} lane={cfg['lane']}",
+             backend="pallas")
+
+    # smoke runs must not clobber the committed full-measurement artifact
+    out = os.path.join(os.path.dirname(__file__),
+                       "BENCH_roofline_smoke.json" if SMOKE
+                       else "BENCH_roofline.json")
+    with open(out, "w") as f:
+        json.dump({"bench": "t13_roofline", "smoke": SMOKE,
+                   "shapes": [list(s) for s in SHAPES],
+                   "peaks": peaks, "rows": report["rows"],
+                   "calibration": calibration, "tiles": tiles},
+                  f, indent=2)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    run()

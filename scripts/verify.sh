@@ -7,6 +7,10 @@
 #   scripts/verify.sh stream   # just the stream/event-time/engine tests
 #   scripts/verify.sh cache    # just the data-plane (ChunkStore/loader)
 #                              # tests
+#   scripts/verify.sh perf     # perf-plane tests + the microbench/
+#                              # roofline harness in seconds-scale smoke
+#                              # mode (tiny shapes, 1 rep) so the
+#                              # measurement path itself is exercised
 #
 # Every mode prints the 10 slowest test durations (--durations=10) so
 # the ~27-minute tier-1 budget stays visible as the suite grows.
@@ -26,6 +30,16 @@ case "$mode" in
             tests/test_engine.py "$@" ;;
   cache) exec python -m pytest -x -q --durations=10 -m "not slow" \
            tests/test_plane.py tests/test_loader.py "$@" ;;
-  *) echo "usage: scripts/verify.sh [fast|full|stream|cache] [pytest args...]" >&2
+  perf) python -m pytest -x -q --durations=10 -m "not slow" \
+          tests/test_perf.py "$@"
+        # exercise the real harness end-to-end (writes BENCH_roofline
+        # smoke artifact into a throwaway calibration dir)
+        calib="$(mktemp -d)"
+        REPRO_PERF_SMOKE=1 REPRO_CALIB_DIR="$calib" \
+          python -m benchmarks.t13_roofline
+        rm -rf "$calib"
+        exec python -m benchmarks.roofline_table \
+          --bench benchmarks/BENCH_roofline_smoke.json ;;
+  *) echo "usage: scripts/verify.sh [fast|full|stream|cache|perf] [pytest args...]" >&2
      exit 2 ;;
 esac

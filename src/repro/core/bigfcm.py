@@ -109,7 +109,8 @@ def run_driver(x_sample: jax.Array, cfg: BigFCMConfig, key: jax.Array):
     c = cfg.n_clusters
     idx = jax.random.choice(key, x_sample.shape[0], (c,), replace=False)
     seeds = jnp.take(x_sample, idx, axis=0)
-    be = resolve_backend(cfg.backend)
+    be = resolve_backend(cfg.backend,
+                         shape=(x_sample.shape[0], c, x_sample.shape[1]))
 
     f_fcm = jax.jit(partial(fcm, m=cfg.m, eps=cfg.driver_eps,
                             max_iter=cfg.max_iter, backend=be))
@@ -209,7 +210,8 @@ def bigfcm_fit(
     key = key if key is not None else jax.random.PRNGKey(cfg.seed)
     k_sample, k_seed = jax.random.split(key)
     n = x.shape[0]
-    be = resolve_backend(cfg.backend)
+    be = resolve_backend(cfg.backend,
+                         shape=(n, cfg.n_clusters, x.shape[1]))
 
     lam = cfg.sample_size or parker_hall_sample_size(
         cfg.n_clusters, cfg.r, cfg.alpha)
@@ -317,7 +319,8 @@ def bigfcm_fit_store(
     key = key if key is not None else jax.random.PRNGKey(cfg.seed)
     k_sample, k_seed = jax.random.split(key)
     n = store.n_rows
-    be = resolve_backend(cfg.backend)
+    be = resolve_backend(cfg.backend,
+                         shape=(n, cfg.n_clusters, store.dim))
 
     lam = cfg.sample_size or parker_hall_sample_size(
         cfg.n_clusters, cfg.r, cfg.alpha)

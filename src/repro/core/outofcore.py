@@ -35,6 +35,10 @@ from .fcm import FCMResult
 BatchIterable = Iterable[Tuple[jax.Array, jax.Array]]
 BatchFactory = Callable[[], BatchIterable]
 
+# out-of-core fits are large by definition: when resolving "auto" the
+# row count is unknowable up front, so race in a big-n shape bucket
+_N_LO_HINT = 1 << 17
+
 
 @functools.lru_cache(maxsize=64)
 def _accumulator(be, m: float):
@@ -101,9 +105,11 @@ def ooc_fcm(
     ``acc`` shares one `make_accumulator` dispatch across calls (e.g.
     every shard of a fit) instead of re-jitting per call.
     """
-    be = resolve_backend(backend)
+    v0 = jnp.asarray(init_centers, jnp.float32)
+    be = resolve_backend(backend, shape=(_N_LO_HINT, v0.shape[0],
+                                         v0.shape[1]))
     acc = acc if acc is not None else make_accumulator(be, m)
-    v = v_prev = jnp.asarray(init_centers, jnp.float32)
+    v = v_prev = v0
     n_iter = 0
     while True:
         delta = float(jnp.max(jnp.sum((v - v_prev) ** 2, axis=-1)))

@@ -4,9 +4,10 @@ One layer owns the paper's two primitives and every policy knob around
 them:
 
   * **backends** (`backend`) — implementations of the O(n·c)
-    accumulation sweep, selected by name (``jnp`` / ``pallas`` /
-    ``pallas_accumulate``) or platform (``"auto"``), instead of
-    hand-threaded sweep callables;
+    accumulation sweep, selected by name (``jnp`` / ``jnp_bf16`` /
+    ``pallas`` / ``pallas_accumulate``) or by measured calibration race
+    (``"auto"`` — `repro.perf`), instead of hand-threaded sweep
+    callables;
   * **summaries** (`summary`) — the (centers, masses) sketch every
     layer trades in;
   * **merge plans** (`merge`) — the weighted summary-reduce in its
@@ -16,8 +17,9 @@ them:
 Batch BigFCM, WFCMPB, the streaming window, and the serve path are all
 thin consumers of this module.
 """
-from .backend import (JnpBackend, SweepBackend, available_backends,
-                      default_backend_name, fcm_accumulate, fcm_sweep,
+from .backend import (Bf16Backend, JnpBackend, SweepBackend,
+                      available_backends, default_backend_name,
+                      fcm_accumulate, fcm_accumulate_mixed, fcm_sweep,
                       get_backend, hard_assign, membership_terms,
                       normalize_accumulators, pairwise_sqdist,
                       register_backend, resolve_backend, soft_assign)
@@ -27,8 +29,9 @@ from .summary import (Summary, phantom, slot_masses, stack, summary,
                       total_mass)
 
 __all__ = [
-    "JnpBackend", "SweepBackend", "available_backends",
-    "default_backend_name", "fcm_accumulate", "fcm_sweep", "get_backend",
+    "Bf16Backend", "JnpBackend", "SweepBackend", "available_backends",
+    "default_backend_name", "fcm_accumulate", "fcm_accumulate_mixed",
+    "fcm_sweep", "get_backend",
     "hard_assign", "membership_terms", "normalize_accumulators",
     "pairwise_sqdist", "register_backend", "resolve_backend",
     "soft_assign", "TOPOLOGIES", "MergePlan", "MergeResult",

@@ -8,6 +8,11 @@ window) runs this same primitive; a *backend* is an implementation of it,
 selected once by name instead of hand-threaded callables:
 
   ``jnp``               — pure-jnp reference (XLA fuses it well on CPU).
+  ``jnp_bf16``          — mixed precision: the two (N,C,d) matmuls take
+                          bf16 inputs, every accumulator (cross term,
+                          v_num, w_i, q) stays f32 — candidate-raced,
+                          never assumed faster (on TPU bf16 matmul peak
+                          is ~2× f32; on CPU the emulation often loses).
   ``pallas``            — fused Pallas TPU kernel (interpret mode on CPU,
                           kept registered there for parity testing).
   ``pallas_accumulate`` — the raw-accumulator Pallas entry point
@@ -16,10 +21,17 @@ selected once by name instead of hand-threaded callables:
                           add elementwise and normalize ONCE — the
                           streaming/merge-fusion backend.
 
-``resolve_backend(None | "auto")`` picks by platform: TPU → ``pallas``,
-anything else → ``jnp`` (the kernel's accumulation scheme is a Mosaic
-semantic; on CPU the pallas paths stay available in interpret mode for
-parity).  The Pallas backends register themselves from
+``resolve_backend(None | "auto")`` selects by MEASUREMENT (PR 6): the
+first "auto" per (platform, shape-bucket) runs a one-shot timed race of
+every registered backend through `repro.perf.calibrate`, gated on
+parity against the jnp oracle, and caches the winner on disk — later
+resolutions (this process or the next) are a cache hit.  Callers that
+know their workload pass ``shape=(n_records, n_clusters, dim)`` so the
+race runs in the right bucket; without it a representative default
+bucket is used.  The old platform-name rule (TPU → ``pallas``, else →
+``jnp``) survives as `default_backend_name()`, the fallback when
+calibration is disabled (``REPRO_AUTO_CALIBRATE=0``) or the perf layer
+fails.  The Pallas backends register themselves from
 `repro.kernels.ops` on first lookup, so this module has no hard kernel
 dependency.
 
@@ -29,7 +41,8 @@ it for the paper-facing API.
 """
 from __future__ import annotations
 
-from typing import Dict, Union
+import warnings
+from typing import Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -103,6 +116,41 @@ def fcm_sweep(x, weights, centers, m):
     return normalize_accumulators(*fcm_accumulate(x, weights, centers, m))
 
 
+def fcm_accumulate_mixed(x, weights, centers, m,
+                         compute_dtype=jnp.bfloat16):
+    """Mixed-precision Alg.-1 accumulators: bf16 compute, f32 accumulate.
+
+    The two O(N·C·d) contractions — the distance cross term and the
+    center numerators — take ``compute_dtype`` inputs with f32
+    accumulation (``preferred_element_type``); the O(N·C) membership
+    math (log-space, transcendental-bound, cheap) and the three
+    accumulators (v_num, w_i, q) stay f32, so partials still add
+    exactly like the f32 backend's.  Distance assembly keeps f32
+    squared norms: d² = x² + v² − 2·x·vᵀ is a cancellation, and bf16
+    norms would poison small distances — the dominant cross term
+    carries the precision loss instead, which objective-parity tests
+    (and the calibration race's parity gate) bound at the fit level.
+    """
+    xc = x.astype(compute_dtype)
+    vc = centers.astype(compute_dtype)
+    xf = x.astype(jnp.float32)
+    vf = centers.astype(jnp.float32)
+    x2 = jnp.sum(xf * xf, axis=-1, keepdims=True)          # (N, 1) f32
+    v2 = jnp.sum(vf * vf, axis=-1)                         # (C,)  f32
+    cross = jax.lax.dot_general(                           # bf16 MXU,
+        xc, vc, (((1,), (1,)), ((), ())),                  # f32 accum
+        preferred_element_type=jnp.float32)                # (N, C)
+    d2 = jnp.maximum(x2 + v2 - 2.0 * cross, _D2_FLOOR)
+    wum = _um_from_d2(d2, m) * weights[:, None]            # f32 (N, C)
+    w_i = jnp.sum(wum, axis=0)                             # (C,)  f32
+    v_num = jax.lax.dot_general(                           # bf16 MXU,
+        wum.astype(compute_dtype), xc,                     # f32 accum
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (C, d)
+    q = jnp.sum(wum * d2)                                  # ()    f32
+    return v_num, w_i, q
+
+
 def soft_assign(x: jax.Array, centers: jax.Array, m: float = 2.0) -> jax.Array:
     """Membership degrees u_ik (not raised to m) — for evaluation/serving.
 
@@ -161,6 +209,19 @@ class JnpBackend(SweepBackend):
         return fcm_sweep(x, w, centers, m)
 
 
+class Bf16Backend(SweepBackend):
+    """Mixed-precision sweep: bf16 matmul inputs, f32 accumulators
+    (`fcm_accumulate_mixed`).  Enters the calibration race like every
+    other backend and wins only where the hardware's bf16 path is
+    actually faster AND the race's parity gate passes — it is never the
+    platform default."""
+
+    name = "jnp_bf16"
+
+    def accumulate(self, x, w, centers, m):
+        return fcm_accumulate_mixed(x, w, centers, m)
+
+
 _REGISTRY: Dict[str, SweepBackend] = {}
 _KERNELS_PROBED = False
 
@@ -174,15 +235,23 @@ def register_backend(backend: SweepBackend) -> SweepBackend:
 
 
 def _probe_kernel_backends() -> None:
-    """Import `repro.kernels.ops` once so its backends self-register."""
+    """Import `repro.kernels.ops` once so its backends self-register.
+
+    A broken kernels layer (pallas API skew raises beyond ImportError)
+    degrades to the jnp paths — but LOUDLY: one `warnings.warn` carries
+    the original error, so "everything silently runs 50× slower on the
+    reference backend" can't happen without a signal."""
     global _KERNELS_PROBED
     if _KERNELS_PROBED:
         return
     _KERNELS_PROBED = True
     try:
         import repro.kernels.ops  # noqa: F401 — registers pallas backends
-    except Exception:  # kernels layer absent OR broken (pallas API skew
-        pass           # raises beyond ImportError): jnp still works
+    except Exception as e:
+        warnings.warn(
+            "repro.kernels.ops failed to import — Pallas sweep backends "
+            f"are unavailable this process; falling back to jnp: {e!r}",
+            RuntimeWarning, stacklevel=3)
 
 
 def available_backends() -> list:
@@ -201,12 +270,16 @@ def get_backend(name: str) -> SweepBackend:
 
 
 def default_backend_name() -> str:
-    """The platform auto-selection rule: TPU → ``pallas``, anything else
-    → ``jnp``.  The Pallas kernel's revisited-output-block accumulation
-    is a Mosaic (TPU) semantic, so GPU hosts get the jnp reference too;
-    on CPU the pallas backends stay registered in interpret mode for
-    parity testing.  A TPU host whose kernels layer failed to import
-    degrades to ``jnp`` (slow but correct) rather than KeyError-ing."""
+    """The platform-name rule: TPU → ``pallas``, anything else →
+    ``jnp``.  Since PR 6 this is a FALLBACK, not the auto-selection:
+    ``resolve_backend("auto")`` picks by measured race
+    (`repro.perf.calibrate`) and only lands here when calibration is
+    disabled or the perf layer is broken.  The Pallas kernel's
+    revisited-output-block accumulation is a Mosaic (TPU) semantic, so
+    GPU hosts get the jnp reference too; on CPU the pallas backends
+    stay registered in interpret mode for parity testing.  A TPU host
+    whose kernels layer failed to import degrades to ``jnp`` (slow but
+    correct) rather than KeyError-ing."""
     if jax.default_backend() == "tpu":
         _probe_kernel_backends()
         if "pallas" in _REGISTRY:
@@ -214,13 +287,43 @@ def default_backend_name() -> str:
     return "jnp"
 
 
-def resolve_backend(spec: BackendLike = None) -> SweepBackend:
-    """None/"auto" → platform default; str → registry; object → itself."""
+_PERF_WARNED = False
+
+
+def _calibrated_name(shape: Optional[Tuple[int, int, int]]) -> Optional[str]:
+    """Measured winner via `repro.perf.calibrate`, or None to fall back
+    to the platform rule (calibration disabled / perf layer broken —
+    the latter warns once, same contract as the kernels probe)."""
+    global _PERF_WARNED
+    try:
+        from repro.perf.calibrate import calibrated_backend_name
+        name = calibrated_backend_name(shape)
+    except Exception as e:
+        if not _PERF_WARNED:
+            _PERF_WARNED = True
+            warnings.warn(
+                "repro.perf calibration failed — backend auto-selection "
+                f"falling back to the platform-name rule: {e!r}",
+                RuntimeWarning, stacklevel=3)
+        return None
+    return name if name in _REGISTRY else None
+
+
+def resolve_backend(spec: BackendLike = None, *,
+                    shape: Optional[Tuple[int, int, int]] = None
+                    ) -> SweepBackend:
+    """None/"auto" → measured winner for ``shape``'s bucket (platform
+    rule as fallback); str → registry; object → itself.  ``shape`` is
+    ``(n_records, n_clusters, dim)`` — pass it when known so the
+    calibration race runs in the caller's own shape bucket."""
     if isinstance(spec, SweepBackend):
         return spec
     if spec is None or spec == "auto":
-        return get_backend(default_backend_name())
+        _probe_kernel_backends()
+        name = _calibrated_name(shape)
+        return get_backend(name or default_backend_name())
     return get_backend(spec)
 
 
 register_backend(JnpBackend())
+register_backend(Bf16Backend())

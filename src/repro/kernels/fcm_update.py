@@ -86,9 +86,11 @@ def _pad_to(a: int, mult: int) -> int:
     return -(-a // mult) * mult
 
 
-@functools.partial(jax.jit, static_argnames=("m", "tile_n", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("m", "tile_n", "lane", "interpret"))
 def fcm_accumulate_pallas(x, w, centers, m: float = 2.0, *,
-                          tile_n: int = 1024, interpret: bool = False):
+                          tile_n: int = 1024, lane: int = LANE,
+                          interpret: bool = False):
     """Raw Alg.-1 accumulators — the *streaming* kernel entry point.
 
     Returns ``(v_num, w_i, q)`` WITHOUT the final normalization: the
@@ -99,12 +101,18 @@ def fcm_accumulate_pallas(x, w, centers, m: float = 2.0, *,
     the concatenation up to float32 summation order
     (`repro.kernels.ops.accumulate_chunks`).
 
+    The two block sizes are tunable (`repro.perf.autotune` searches
+    them): ``tile_n`` rows stream per grid step, and ``lane`` is the
+    padding multiple for the C and d axes.  On real TPU hardware
+    ``lane`` must stay at the 128 MXU width; interpret mode accepts
+    smaller lanes, where not padding C=8 → 128 is a large win.
+
     x: (N, d) float32/bf16;  w: (N,);  centers: (C, d).
     """
     n, d = x.shape
     c = centers.shape[0]
-    dp = _pad_to(max(d, LANE), LANE)
-    cp = _pad_to(max(c, LANE), LANE)
+    dp = _pad_to(max(d, lane), lane)
+    cp = _pad_to(max(c, lane), lane)
     tn = min(tile_n, _pad_to(n, 8))
     np_ = _pad_to(n, tn)
 
@@ -141,13 +149,15 @@ def fcm_accumulate_pallas(x, w, centers, m: float = 2.0, *,
     return vnum[:c, :d], wacc[0, :c], q[0, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("m", "tile_n", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("m", "tile_n", "lane", "interpret"))
 def fcm_sweep_pallas(x, w, centers, m: float = 2.0, *,
-                     tile_n: int = 1024, interpret: bool = False):
+                     tile_n: int = 1024, lane: int = LANE,
+                     interpret: bool = False):
     """Pallas-backed Alg.-1 sweep.  Returns (v_new, w_i, q) like
     ``core.fcm.fcm_sweep``: the accumulate entry point plus the one
     normalization it defers."""
     v_num, w_i, q = fcm_accumulate_pallas(x, w, centers, m, tile_n=tile_n,
-                                          interpret=interpret)
+                                          lane=lane, interpret=interpret)
     v_new = v_num / jnp.maximum(w_i, _D2_FLOOR)[:, None]
     return v_new, w_i, q

@@ -18,28 +18,51 @@ import jax.numpy as jnp
 from repro.engine.backend import (SweepBackend, normalize_accumulators,
                                   register_backend)
 
-from .fcm_update import _D2_FLOOR, fcm_accumulate_pallas, fcm_sweep_pallas
+from .fcm_update import (_D2_FLOOR, LANE, fcm_accumulate_pallas,
+                         fcm_sweep_pallas)
 
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
-def fcm_sweep_kernel(x, w, centers, m: float = 2.0, *, tile_n: int = 1024):
-    """Fused Pallas sweep — drop-in for the jnp `engine.fcm_sweep`."""
-    return fcm_sweep_pallas(x, w, centers, m, tile_n=tile_n,
-                            interpret=_on_cpu())
+def _blocks_for(x, centers, tile_n, lane) -> dict:
+    """Resolve the kernel's block sizes: explicit args win, otherwise
+    the autotuned config for this shape bucket (`repro.perf.autotune`,
+    cached-only — never triggers a search), otherwise the hand-picked
+    defaults.  Runs at trace time only (static kernel params)."""
+    tuned = None
+    if tile_n is None or lane is None:
+        try:
+            from repro.perf.autotune import tuned_blocks
+            tuned = tuned_blocks((x.shape[0], centers.shape[0],
+                                  centers.shape[1]))
+        except Exception:   # perf layer absent/broken: defaults still work
+            tuned = None
+        tuned = tuned or {}
+    return {"tile_n": tile_n if tile_n is not None
+            else tuned.get("tile_n", 1024),
+            "lane": lane if lane is not None else tuned.get("lane", LANE)}
+
+
+def fcm_sweep_kernel(x, w, centers, m: float = 2.0, *,
+                     tile_n: int = None, lane: int = None):
+    """Fused Pallas sweep — drop-in for the jnp `engine.fcm_sweep`.
+    Block sizes default to the autotuned config for this shape bucket
+    when one exists (see `_blocks_for`)."""
+    return fcm_sweep_pallas(x, w, centers, m, interpret=_on_cpu(),
+                            **_blocks_for(x, centers, tile_n, lane))
 
 
 def fcm_accumulate_kernel(x, w, centers, m: float = 2.0, *,
-                          tile_n: int = 1024):
+                          tile_n: int = None, lane: int = None):
     """Raw (v_num, w_i, q) accumulators for one record chunk."""
-    return fcm_accumulate_pallas(x, w, centers, m, tile_n=tile_n,
-                                 interpret=_on_cpu())
+    return fcm_accumulate_pallas(x, w, centers, m, interpret=_on_cpu(),
+                                 **_blocks_for(x, centers, tile_n, lane))
 
 
 def accumulate_chunks(chunks, weights, centers, m: float = 2.0, *,
-                      tile_n: int = 1024, accumulate_fn=None):
+                      tile_n: int = None, accumulate_fn=None):
     """One FCM sweep over a stream of chunks without materializing it.
 
     ``chunks``/``weights`` are iterables of (n_i, d)/(n_i,) arrays —

@@ -1,235 +1,21 @@
 """Roofline-term extraction from a compiled dry-run artifact.
 
-Terms (seconds), per DESIGN.md §6 — all normalized per chip:
-  compute    = HLO_FLOPs_per_device / peak_flops
-  memory     = HLO_bytes_per_device / hbm_bw
-  collective = collective_bytes_per_device / link_bw
-
-`cost_analysis()` on the partitioned executable reports per-device FLOPs
-and bytes.  Collective bytes are not in cost_analysis: we parse the
-post-SPMD HLO and sum max(operand, result) sizes of every collective op.
+The generic roofline machinery — the `Roofline` dataclass
+(compute/memory/collective time terms per DESIGN.md §6),
+`compiled_cost`, and the trip-count-corrected HLO collective parse —
+moved to `repro.perf.roofline` in the PR-6 unification (one roofline
+layer under both the LM dry-run path and the FCM sweep measurement);
+this module re-exports them unchanged for the dry-run consumers and
+keeps only the LM-model-specific half: `active_params` and
+`model_flops_for` (6·N_active·D useful-FLOPs accounting).
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-import re
-from typing import Dict, Optional
 
-# v5e hardware constants (per chip)
-PEAK_FLOPS = 197e12          # bf16
-HBM_BW = 819e9               # B/s
-ICI_BW = 50e9                # B/s per link
-
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
-    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
-    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
-    "c64": 8, "c128": 16, "u4": 1,
-}
-
-_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-
-
-def _shape_bytes(shape_str: str) -> int:
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(shape_str):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-_OP_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+([a-z][\w\-]*)\(")
-_CALLED_RE = re.compile(r"(?:body|to_apply|condition)=%?([\w.\-]+)")
-_CONST_RE = re.compile(r"constant\((\d+)\)")
-
-
-def _split_computations(hlo_text: str) -> Dict[str, str]:
-    """computation name → body text (brace-balanced blocks)."""
-    comps: Dict[str, str] = {}
-    name, depth, buf = None, 0, []
-    for line in hlo_text.splitlines():
-        if name is None:
-            m = re.match(r"\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*"
-                         r"(?:->.*)?\{", line)
-            if m and "{" in line:
-                name, depth, buf = m.group(1), line.count("{") - \
-                    line.count("}"), [line]
-                if depth <= 0:
-                    comps[name] = line
-                    name = None
-            continue
-        buf.append(line)
-        depth += line.count("{") - line.count("}")
-        if depth <= 0:
-            comps[name] = "\n".join(buf)
-            name = None
-    return comps
-
-
-def collective_bytes(hlo_text: str) -> Dict[str, int]:
-    """Per-collective-kind byte totals from post-SPMD HLO text, with
-    while-loop trip-count correction: collectives inside a while body are
-    multiplied by the loop's trip count (read off the `constant(N)` bound
-    in the condition computation) — XLA's cost/HLO text counts loop
-    bodies ONCE, which would undercount per-layer collectives by ×L."""
-    comps = _split_computations(hlo_text)
-
-    def find_entry():
-        for n, t in comps.items():
-            if "ENTRY" in t.splitlines()[0] or n.startswith("main"):
-                return n
-        # fallback: computation not referenced by any other
-        referenced = set()
-        for t in comps.values():
-            referenced.update(_CALLED_RE.findall(t))
-        for n in comps:
-            if n not in referenced:
-                return n
-        return next(iter(comps))
-
-    def trip_count(cond_name: str) -> int:
-        text = comps.get(cond_name, "")
-        consts = [int(c) for c in _CONST_RE.findall(text)]
-        return max(consts) if consts else 1
-
-    def scan(comp_name: str, seen) -> Dict[str, int]:
-        out = {k: 0 for k in _COLLECTIVES}
-        text = comps.get(comp_name)
-        if text is None or comp_name in seen:
-            return out
-        seen = seen | {comp_name}
-        for line in text.splitlines():
-            m = _OP_RE.match(line)
-            if not m:
-                continue
-            shape_part, op = m.groups()
-            if op == "while":
-                called = dict(
-                    (k, v) for k, v in re.findall(
-                        r"(body|condition)=%?([\w.\-]+)", line))
-                trips = trip_count(called.get("condition", ""))
-                inner = scan(called.get("body", ""), seen)
-                for k in out:
-                    out[k] += inner[k] * max(trips, 1)
-                continue
-            kind = next((k for k in _COLLECTIVES
-                         if op == k or op == k + "-start"), None)
-            if kind is not None:
-                paren = line[m.end() - 1:]
-                nbytes = max(_shape_bytes(shape_part),
-                             _shape_bytes(paren))
-                # CPU-backend float normalization promotes bf16
-                # all-reduces to f32 (`to_apply=%add..._promoted`,
-                # convert_bitcast operands).  On the TPU target the wire
-                # dtype stays bf16 — count at native width.
-                if "promoted" in line or "convert_bitcast" in line:
-                    nbytes //= 2
-                out[kind] += nbytes
-                continue
-            # recurse into called computations (fusions can't hold
-            # collectives but conditionals/calls can)
-            if op in ("call", "conditional"):
-                for sub in _CALLED_RE.findall(line):
-                    inner = scan(sub, seen)
-                    for k in out:
-                        out[k] += inner[k]
-        return out
-
-    return scan(find_entry(), frozenset())
-
-
-@dataclasses.dataclass
-class Roofline:
-    flops: float                 # per-device
-    hbm_bytes: float             # per-device
-    coll_bytes: float            # per-device
-    coll_breakdown: Dict[str, int]
-    model_flops: float           # 6·N_active·D global (useful FLOPs)
-    n_devices: int
-
-    @property
-    def t_compute(self) -> float:
-        return self.flops / PEAK_FLOPS
-
-    @property
-    def t_memory(self) -> float:
-        return self.hbm_bytes / HBM_BW
-
-    @property
-    def t_collective(self) -> float:
-        return self.coll_bytes / ICI_BW
-
-    @property
-    def bottleneck(self) -> str:
-        terms = {"compute": self.t_compute, "memory": self.t_memory,
-                 "collective": self.t_collective}
-        return max(terms, key=terms.get)
-
-    @property
-    def t_bound(self) -> float:
-        return max(self.t_compute, self.t_memory, self.t_collective)
-
-    @property
-    def useful_flops_ratio(self) -> float:
-        """MODEL_FLOPS / total compiled FLOPs (global)."""
-        tot = self.flops * self.n_devices
-        return self.model_flops / tot if tot else 0.0
-
-    @property
-    def mfu_bound(self) -> float:
-        """Model-FLOPs utilization at the roofline bound (upper bound on
-        achievable MFU for this program)."""
-        denom = self.t_bound * self.n_devices * PEAK_FLOPS
-        return self.model_flops / denom if denom else 0.0
-
-    def to_dict(self) -> dict:
-        return {
-            "flops_per_dev": self.flops,
-            "hbm_bytes_per_dev": self.hbm_bytes,
-            "coll_bytes_per_dev": self.coll_bytes,
-            "coll_breakdown": self.coll_breakdown,
-            "model_flops": self.model_flops,
-            "n_devices": self.n_devices,
-            "t_compute_s": self.t_compute,
-            "t_memory_s": self.t_memory,
-            "t_collective_s": self.t_collective,
-            "bottleneck": self.bottleneck,
-            "useful_flops_ratio": self.useful_flops_ratio,
-            "mfu_bound": self.mfu_bound,
-        }
-
-
-def compiled_cost(compiled) -> Dict[str, float]:
-    cost = compiled.cost_analysis()
-    if isinstance(cost, list):
-        cost = cost[0]
-    return {"flops": float(cost.get("flops", 0.0)),
-            "bytes_accessed": float(cost.get("bytes accessed", 0.0))}
-
-
-def analyze(compiled, model_flops: float, n_devices: int, *,
-            analytic_flops: float, analytic_bytes: float,
-            hlo_text: Optional[str] = None) -> Roofline:
-    """compute/memory terms from the analytic model (cost_analysis counts
-    scan bodies once — see flops_model.py docstring); collective term from
-    the trip-count-corrected HLO parse of the compiled artifact."""
-    text = hlo_text if hlo_text is not None else compiled.as_text()
-    coll = collective_bytes(text)
-    return Roofline(flops=analytic_flops / n_devices,
-                    hbm_bytes=analytic_bytes / n_devices,
-                    coll_bytes=float(sum(coll.values())),
-                    coll_breakdown=coll, model_flops=model_flops,
-                    n_devices=n_devices)
+from repro.perf.roofline import (  # noqa: F401 — dry-run re-exports
+    HBM_BW, ICI_BW, PEAK_FLOPS, Roofline, analyze, collective_bytes,
+    compiled_cost)
 
 
 # ------------------------------------------------- model-FLOPs model -----

@@ -1,0 +1,94 @@
+"""Empirical peak probes (ERT-style) + the one timing harness.
+
+The machine's peaks are *measured*, not read off a spec sheet: a
+streaming-bandwidth triad (``y = a·x + y`` — the Berkeley ERT KERNEL2
+shape) probes bytes/s and a square matmul probes FLOPs/s, each run over
+a small ladder of sizes with the best result kept (ERT's "repeat and
+take the max" rule — a probe can only *under*-estimate the roof).
+`repro.perf.roofline` divides achieved rates by these to report how far
+from peak each sweep backend sits, and `repro.perf.calibrate` stores
+them in the calibration file so the probe runs once per machine.
+
+bf16 matmul peak is probed separately: on TPU it is ~2× the f32 peak
+(the ipex roofline spec models half/bf16 at 2× fp32), on CPU the XLA
+emulation usually makes it *slower* — which is exactly why the
+`jnp_bf16` backend must win a measured race, not be assumed faster.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["time_fn", "probe_stream_bandwidth", "probe_matmul_flops",
+           "probe_peaks"]
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-seconds of ``fn(*args)`` with block_until_ready.
+
+    ``warmup`` calls are excluded (compile time is a one-off a deployed
+    fit pays once; the race compares steady-state sweeps).
+    """
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def probe_stream_bandwidth(n_floats: int = 1 << 22, *,
+                           iters: int = 3) -> float:
+    """Achievable streaming bandwidth (bytes/s) via the f32 triad
+    ``out = 1.5·x + y``: reads two arrays, writes one ⇒ 12 bytes per
+    element.  ``n_floats`` defaults to 4M (16 MiB/array) — large enough
+    to stream past L2 on every current host."""
+    x = (jnp.arange(n_floats, dtype=jnp.float32) % 97.0) * 0.25
+    y = jnp.ones((n_floats,), jnp.float32)
+    f = jax.jit(lambda a, b: 1.5 * a + b)
+    t = time_fn(f, x, y, iters=iters)
+    return 3.0 * 4.0 * n_floats / t
+
+
+def probe_matmul_flops(n: int = 512, dtype=jnp.float32, *,
+                       iters: int = 3) -> float:
+    """Achievable matmul FLOPs/s: (n,n)·(n,n) with f32 accumulation
+    (``preferred_element_type``), 2·n³ FLOPs — the same contraction the
+    sweep's two MXU matmuls lower to."""
+    a = ((jnp.arange(n * n, dtype=jnp.float32) % 13.0) / 13.0
+         ).reshape(n, n).astype(dtype)
+    b = ((jnp.arange(n * n, dtype=jnp.float32) % 7.0) / 7.0
+         ).reshape(n, n).astype(dtype)
+    f = jax.jit(lambda p, q: jax.lax.dot_general(
+        p, q, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32))
+    t = time_fn(f, a, b, iters=iters)
+    return 2.0 * float(n) ** 3 / t
+
+
+def probe_peaks(*, stream_floats: Iterable[int] = (1 << 21, 1 << 22),
+                matmul_ns: Iterable[int] = (256, 512),
+                iters: int = 3) -> dict:
+    """Run every probe over its size ladder; keep the best (ERT rule).
+
+    Returns the dict the calibration file stores under ``"peaks"``.
+    """
+    bw = max(probe_stream_bandwidth(s, iters=iters) for s in stream_floats)
+    f32 = max(probe_matmul_flops(n, jnp.float32, iters=iters)
+              for n in matmul_ns)
+    bf16 = max(probe_matmul_flops(n, jnp.bfloat16, iters=iters)
+               for n in matmul_ns)
+    return {
+        "stream_bytes_per_s": bw,
+        "matmul_f32_flops_per_s": f32,
+        "matmul_bf16_flops_per_s": bf16,
+        "probe": {"stream_floats": list(stream_floats),
+                  "matmul_ns": list(matmul_ns), "iters": iters,
+                  "platform": jax.default_backend()},
+    }

@@ -1,0 +1,367 @@
+"""Unified roofline layer (PR 6) — analytic models + achieved-vs-peak.
+
+This module merges the three half-built roofline pieces the repo grew
+separately:
+
+  * the **compiled-program roofline** (previously `launch/roofline.py`):
+    the `Roofline` dataclass with compute/memory/collective time terms,
+    `compiled_cost`, and the trip-count-corrected HLO collective parse —
+    `repro.launch.roofline` now re-exports these for the dry-run path;
+  * the **analytic per-kernel model** (the role `launch/flops_model.py`
+    plays for the LM step): `sweep_flops`/`sweep_bytes` count the O(n·c)
+    FCM accumulation sweep exactly — two (N,C,d) contractions plus
+    O(N·C) elementwise membership work;
+  * the **table renderer** hooks (`benchmarks/roofline_table.py` renders
+    both the dry-run artifacts and this module's `roofline_report`).
+
+Achieved-vs-peak: `kernel_roofline` times one registered sweep backend
+at a shape, divides the analytic FLOPs/bytes by measured wall time, and
+reports the fraction of the *probed* peaks (`repro.perf.microbench`)
+each rate reaches, plus the analytic roofline bound and the fraction of
+that bound actually achieved.  `roofline_report` fans this over every
+registered backend × a shape ladder — the `BENCH_roofline.json` payload.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# v5e hardware spec-sheet constants (per chip) — the *compiled-program*
+# roofline (dry-run path) targets the TPU deployment; the sweep
+# roofline below uses probed peaks for the machine actually running.
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+([a-z][\w\-]*)\(")
+_CALLED_RE = re.compile(r"(?:body|to_apply|condition)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    """computation name → body text (brace-balanced blocks)."""
+    comps: Dict[str, str] = {}
+    name, depth, buf = None, 0, []
+    for line in hlo_text.splitlines():
+        if name is None:
+            m = re.match(r"\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*"
+                         r"(?:->.*)?\{", line)
+            if m and "{" in line:
+                name, depth, buf = m.group(1), line.count("{") - \
+                    line.count("}"), [line]
+                if depth <= 0:
+                    comps[name] = line
+                    name = None
+            continue
+        buf.append(line)
+        depth += line.count("{") - line.count("}")
+        if depth <= 0:
+            comps[name] = "\n".join(buf)
+            name = None
+    return comps
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind byte totals from post-SPMD HLO text, with
+    while-loop trip-count correction: collectives inside a while body are
+    multiplied by the loop's trip count (read off the `constant(N)` bound
+    in the condition computation) — XLA's cost/HLO text counts loop
+    bodies ONCE, which would undercount per-layer collectives by ×L."""
+    comps = _split_computations(hlo_text)
+
+    def find_entry():
+        for n, t in comps.items():
+            if "ENTRY" in t.splitlines()[0] or n.startswith("main"):
+                return n
+        # fallback: computation not referenced by any other
+        referenced = set()
+        for t in comps.values():
+            referenced.update(_CALLED_RE.findall(t))
+        for n in comps:
+            if n not in referenced:
+                return n
+        return next(iter(comps))
+
+    def trip_count(cond_name: str) -> int:
+        text = comps.get(cond_name, "")
+        consts = [int(c) for c in _CONST_RE.findall(text)]
+        return max(consts) if consts else 1
+
+    def scan(comp_name: str, seen) -> Dict[str, int]:
+        out = {k: 0 for k in _COLLECTIVES}
+        text = comps.get(comp_name)
+        if text is None or comp_name in seen:
+            return out
+        seen = seen | {comp_name}
+        for line in text.splitlines():
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            shape_part, op = m.groups()
+            if op == "while":
+                called = dict(
+                    (k, v) for k, v in re.findall(
+                        r"(body|condition)=%?([\w.\-]+)", line))
+                trips = trip_count(called.get("condition", ""))
+                inner = scan(called.get("body", ""), seen)
+                for k in out:
+                    out[k] += inner[k] * max(trips, 1)
+                continue
+            kind = next((k for k in _COLLECTIVES
+                         if op == k or op == k + "-start"), None)
+            if kind is not None:
+                paren = line[m.end() - 1:]
+                nbytes = max(_shape_bytes(shape_part),
+                             _shape_bytes(paren))
+                # CPU-backend float normalization promotes bf16
+                # all-reduces to f32 (`to_apply=%add..._promoted`,
+                # convert_bitcast operands).  On the TPU target the wire
+                # dtype stays bf16 — count at native width.
+                if "promoted" in line or "convert_bitcast" in line:
+                    nbytes //= 2
+                out[kind] += nbytes
+                continue
+            # recurse into called computations (fusions can't hold
+            # collectives but conditionals/calls can)
+            if op in ("call", "conditional"):
+                for sub in _CALLED_RE.findall(line):
+                    inner = scan(sub, seen)
+                    for k in out:
+                        out[k] += inner[k]
+        return out
+
+    return scan(find_entry(), frozenset())
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device
+    hbm_bytes: float             # per-device
+    coll_bytes: float            # per-device
+    coll_breakdown: Dict[str, int]
+    model_flops: float           # 6·N_active·D global (useful FLOPs)
+    n_devices: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total compiled FLOPs (global)."""
+        tot = self.flops * self.n_devices
+        return self.model_flops / tot if tot else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline bound (upper bound on
+        achievable MFU for this program)."""
+        denom = self.t_bound * self.n_devices * PEAK_FLOPS
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "n_devices": self.n_devices,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def compiled_cost(compiled) -> Dict[str, float]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0))}
+
+
+def analyze(compiled, model_flops: float, n_devices: int, *,
+            analytic_flops: float, analytic_bytes: float,
+            hlo_text: Optional[str] = None) -> Roofline:
+    """compute/memory terms from the analytic model (cost_analysis counts
+    scan bodies once — see launch/flops_model.py docstring); collective
+    term from the trip-count-corrected HLO parse of the compiled
+    artifact."""
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    return Roofline(flops=analytic_flops / n_devices,
+                    hbm_bytes=analytic_bytes / n_devices,
+                    coll_bytes=float(sum(coll.values())),
+                    coll_breakdown=coll, model_flops=model_flops,
+                    n_devices=n_devices)
+
+
+# ------------------------------------------ FCM sweep analytic model -----
+
+def sweep_flops(n: int, c: int, d: int) -> float:
+    """FLOPs of one `fcm_accumulate` sweep at (N, C, d).
+
+    Exact for the implemented math: the two (N,C,d) contractions
+    (distance cross term ``x·vᵀ`` and numerator ``(w·u^m)ᵀ·x``, 2·N·C·d
+    each), the squared-norm terms (2·N·d + 2·C·d), distance assembly
+    (3·N·C), the log-space membership (log, exp, div, pow, min —
+    counted 1 FLOP per transcendental, ≈8·N·C), and the three
+    accumulator reductions (≈3·N·C).
+    """
+    return (4.0 * n * c * d          # the two MXU contractions
+            + 2.0 * n * d + 2.0 * c * d
+            + 14.0 * n * c)          # d2 + membership + reductions
+
+
+def sweep_bytes(n: int, c: int, d: int, *, in_bytes: int = 4) -> float:
+    """Minimum HBM traffic of one sweep: stream X and w once, read V,
+    write the three accumulators once.  The (N,C) membership matrix is
+    *not* counted — staying tile-resident is the Kolen–Hutcheson O(n·c)
+    property the kernel enforces architecturally; a backend that spills
+    it shows up as achieved-bytes ≫ this model (fraction > 1), which is
+    a finding, not an error."""
+    return (n * d * in_bytes + n * in_bytes       # X, w streamed
+            + c * d * in_bytes                    # V resident, read once
+            + (c * d + c + 1) * 4.0)              # v_num, w_i, q written
+
+
+def sweep_intensity(n: int, c: int, d: int, *, in_bytes: int = 4) -> float:
+    """Arithmetic intensity (FLOP/byte) — ≈ C for d ≫ 1, the kernel
+    docstring's compute-bound-for-C≥256 rule."""
+    return sweep_flops(n, c, d) / sweep_bytes(n, c, d, in_bytes=in_bytes)
+
+
+# ------------------------------------------------ achieved vs peak -------
+
+def _race_data(n: int, c: int, d: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.5, 2.0, size=(n,)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(c, d)).astype(np.float32))
+    return x, w, v
+
+
+def kernel_roofline(backend, shape, *, peaks: Optional[dict] = None,
+                    m: float = 2.0, warmup: int = 1, iters: int = 3,
+                    in_bytes: int = 4) -> dict:
+    """Measure one backend's sweep at ``shape=(n, c, d)`` against the
+    analytic model and the probed peaks.
+
+    Returns a flat row: measured seconds, achieved FLOPs/s and bytes/s
+    (analytic work ÷ wall time), fraction of probed matmul/stream peaks,
+    the analytic roofline bound at those peaks, and the fraction of that
+    bound achieved.  ``backend`` is a name or SweepBackend.
+    """
+    from repro.engine.backend import resolve_backend
+    from .microbench import probe_peaks, time_fn
+
+    be = resolve_backend(backend) if not hasattr(backend, "sweep") \
+        else backend
+    peaks = peaks if peaks is not None else probe_peaks(iters=iters)
+    n, c, d = (int(s) for s in shape)
+    x, w, v = _race_data(n, c, d)
+    fn = jax.jit(lambda a, b, v0: be.sweep(a, b, v0, m))
+    t = time_fn(fn, x, w, v, warmup=warmup, iters=iters)
+
+    flops, nbytes = sweep_flops(n, c, d), sweep_bytes(n, c, d,
+                                                      in_bytes=in_bytes)
+    peak_flops = peaks["matmul_bf16_flops_per_s"] \
+        if be.name.endswith("bf16") else peaks["matmul_f32_flops_per_s"]
+    peak_bw = peaks["stream_bytes_per_s"]
+    t_compute, t_memory = flops / peak_flops, nbytes / peak_bw
+    t_bound = max(t_compute, t_memory)
+    return {
+        "backend": be.name,
+        "platform": jax.default_backend(),
+        "n": n, "c": c, "d": d,
+        "seconds": t,
+        "records_per_s": n / t,
+        "achieved_flops_per_s": flops / t,
+        "achieved_bytes_per_s": nbytes / t,
+        "frac_of_peak_flops": (flops / t) / peak_flops,
+        "frac_of_peak_bw": (nbytes / t) / peak_bw,
+        "intensity_flop_per_byte": flops / nbytes,
+        "bound": "compute" if t_compute >= t_memory else "memory",
+        "t_bound_s": t_bound,
+        "frac_of_bound": t_bound / t,
+    }
+
+
+def roofline_report(shapes: Sequence = ((16_384, 8, 16), (16_384, 64, 64)),
+                    *, backends: Optional[Sequence[str]] = None,
+                    peaks: Optional[dict] = None, m: float = 2.0,
+                    iters: int = 3) -> dict:
+    """Achieved-vs-peak rows for every registered backend × shape —
+    the `BENCH_roofline.json` payload (`benchmarks/t13_roofline.py`)."""
+    from repro.engine.backend import available_backends
+    from .microbench import probe_peaks
+
+    peaks = peaks if peaks is not None else probe_peaks(iters=iters)
+    names = list(backends) if backends is not None else \
+        available_backends()
+    rows = []
+    for shape in shapes:
+        for name in names:
+            try:
+                rows.append(kernel_roofline(name, shape, peaks=peaks,
+                                            m=m, iters=iters))
+            except Exception as e:  # a backend that can't run this
+                rows.append({"backend": name,      # shape is a row, not
+                             "platform": jax.default_backend(),  # a crash
+                             "n": shape[0], "c": shape[1], "d": shape[2],
+                             "error": repr(e)})
+    return {"peaks": peaks, "rows": rows}

@@ -37,16 +37,74 @@ def _rand(n, d, c, seed=0):
 # ------------------------------------------------------------- registry --
 
 def test_registry_names_and_auto_rule():
-    assert set(BACKENDS) <= set(available_backends())
-    # TPU → the fused kernel; CPU/GPU hosts → the jnp reference
+    assert set(BACKENDS) | {"jnp_bf16"} <= set(available_backends())
+    # the platform-name rule survives as the FALLBACK only
     want = "pallas" if jax.default_backend() == "tpu" else "jnp"
     assert default_backend_name() == want
-    assert resolve_backend(None).name == want
-    assert resolve_backend("auto").name == want
+    # "auto" picks by measured race (PR 6): on a CPU host the winner is
+    # one of the full-speed jnp-family sweeps, never interpret-mode
+    # pallas; which of the two wins is the machine's call, not ours
+    for spec in (None, "auto"):
+        got = resolve_backend(spec).name
+        if jax.default_backend() == "cpu":
+            assert got in ("jnp", "jnp_bf16")
+        else:
+            assert got in available_backends()
     be = get_backend("pallas")
     assert resolve_backend(be) is be
     with pytest.raises(KeyError, match="unknown sweep backend"):
         get_backend("cuda")
+
+
+def test_broken_kernels_import_warns_and_degrades_to_jnp():
+    """PR-6 satellite: a poisoned `repro.kernels.ops` import must emit
+    one RuntimeWarning carrying the original error — never a silent
+    degrade to the 50×-slower reference path — and the jnp backends must
+    keep resolving."""
+    import sys
+
+    from repro.engine import backend as backend_mod
+
+    saved_probed = backend_mod._KERNELS_PROBED
+    saved_mods = {k: sys.modules.pop(k) for k in list(sys.modules)
+                  if k.startswith("repro.kernels")}
+    saved_backends = {k: backend_mod._REGISTRY.pop(k) for k in
+                      ("pallas", "pallas_accumulate")
+                      if k in backend_mod._REGISTRY}
+
+    import importlib.util
+
+    class _PoisonLoader:
+        def create_module(self, spec):
+            return None
+
+        def exec_module(self, module):
+            raise RuntimeError("poisoned kernels import (test)")
+
+    class _Poison:
+        def find_spec(self, name, path=None, target=None):
+            if name == "repro.kernels.ops":
+                return importlib.util.spec_from_loader(name,
+                                                       _PoisonLoader())
+            return None
+
+    finder = _Poison()
+    sys.meta_path.insert(0, finder)
+    backend_mod._KERNELS_PROBED = False
+    try:
+        with pytest.warns(RuntimeWarning,
+                          match="poisoned kernels import"):
+            backend_mod._probe_kernel_backends()
+        # degraded but alive: the jnp family still resolves
+        assert get_backend("jnp").name == "jnp"
+        assert "pallas" not in backend_mod._REGISTRY
+        with pytest.raises(KeyError):
+            get_backend("pallas")
+    finally:
+        sys.meta_path.remove(finder)
+        sys.modules.update(saved_mods)
+        backend_mod._REGISTRY.update(saved_backends)
+        backend_mod._KERNELS_PROBED = saved_probed
 
 
 # ----------------------------------------------------- parity (engine) --
@@ -110,8 +168,11 @@ def test_flat_and_windowed_topologies_agree_exactly():
                 jnp.asarray(rng.uniform(0.5, 2, size=(6, 4))
                             .astype(np.float32)))
     plan = dict(m=2.0, eps=1e-12, max_iter=300)
-    rf = merge_summaries(s, MergePlan("flat", **plan))
-    rw = merge_summaries(s, MergePlan("windowed", **plan))
+    # a math-identity assertion: pin the deterministic f32 reference
+    # backend ("auto" may legitimately pick jnp_bf16, whose matmul
+    # rounding differs between the two accumulation shapes)
+    rf = merge_summaries(s, MergePlan("flat", **plan), backend="jnp")
+    rw = merge_summaries(s, MergePlan("windowed", **plan), backend="jnp")
     np.testing.assert_allclose(np.asarray(rf.summary.centers),
                                np.asarray(rw.summary.centers), atol=1e-4)
     np.testing.assert_allclose(np.asarray(rf.summary.masses),
@@ -154,7 +215,9 @@ def test_merge_topology_agreement_centers_objective_only():
         jnp.asarray(rng.uniform(0.8, 1.2, size=(slots, c))
                     .astype(np.float32)))
     plan = dict(m=2.0, eps=1e-12, max_iter=300)
-    res = {t: merge_summaries(s, MergePlan(t, **plan))
+    # pinned to the f32 reference: the windowed-vs-flat mass identity
+    # below is asserted at rtol 1e-4, tighter than bf16 rounding
+    res = {t: merge_summaries(s, MergePlan(t, **plan), backend="jnp")
            for t in ("flat", "pairwise", "windowed")}
 
     # centers: all three topologies land on the same optimum
@@ -184,7 +247,8 @@ def test_merge_topology_agreement_centers_objective_only():
                         size=(slots, c, d)).astype(np.float32)),
         jnp.asarray(rng.uniform(0.8, 1.2, size=(slots, c))
                     .astype(np.float32)))
-    fres = {t: merge_summaries(fuzzy, MergePlan(t, **plan))
+    fres = {t: merge_summaries(fuzzy, MergePlan(t, **plan),
+                               backend="jnp")
             for t in ("flat", "pairwise", "windowed")}
     m_in = float(fuzzy.masses.sum())
     m_flat = float(fres["flat"].summary.masses.sum())
