@@ -10,6 +10,9 @@ on free-text ``derived`` strings.
 """
 from __future__ import annotations
 
+import functools
+import os
+import subprocess
 import time
 from typing import Callable, Optional
 
@@ -17,6 +20,21 @@ import jax
 
 ROWS = []
 ROWS_META = []
+
+
+@functools.lru_cache(maxsize=1)
+def git_commit() -> str:
+    """The repo's HEAD commit hash, best-effort: empty string outside a
+    git checkout (or without git) — perf rows stay comparable across
+    machines either way, but a hash pins a row to the exact code."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10)
+    except (OSError, subprocess.TimeoutExpired):
+        return ""
+    return out.stdout.strip() if out.returncode == 0 else ""
 
 
 def on_interpret(backend_name: str) -> Optional[bool]:
@@ -45,7 +63,8 @@ def emit(name: str, us_per_call: float, derived: str = "", *,
     ROWS.append(row)
     print(row, flush=True)
     meta = {"name": name, "us_per_call": round(us_per_call, 1),
-            "derived": derived, "platform": jax.default_backend()}
+            "derived": derived, "platform": jax.default_backend(),
+            "git_commit": git_commit()}
     if backend is not None:
         meta["backend"] = backend
         if interpret is None:

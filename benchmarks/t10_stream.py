@@ -1,12 +1,16 @@
 """Streaming ingest benchmark (PR 2, `repro.stream`).
 
 Measures the two latencies that bound a streaming deployment and writes
-``benchmarks/BENCH_stream.json`` (rows with the `common.py` schema:
-name / us_per_call / derived):
+``benchmarks/BENCH_stream.json`` (rows are the structured `common.emit`
+meta dicts: name / us_per_call / derived / platform / git_commit):
 
   * **sustained ingest** — records/sec through the full state machine
     (socket-sim source → combiner → window push → merge-plan WFCM
     reduce → drift stats), steady-state after the compile warm-up;
+    measured twice — instrumentation enabled (the default) and under
+    the ``REPRO_OBS=0`` kill switch — so the observability plane's
+    overhead is a recorded number, not a promise (the <5% budget
+    `tests/test_obs.py` enforces);
   * **window merge latency** — the `cfg.merge_plan` reduce over the
     (W, C, d) ring buffer alone (the per-batch serving-freshness cost);
   * **accumulate sweep** — the raw Pallas streaming-accumulate entry
@@ -26,6 +30,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.data import (iterator_source, make_moving_blobs,
                         out_of_order_source, socket_sim_source,
                         stamp_source)
@@ -38,10 +43,23 @@ CHUNK, N_CHUNKS, D, C = 8192, 8, 16, 8
 ROWS_JSON = []
 
 
-def _emit(name: str, us_per_call: float, derived: str = ""):
-    emit(name, us_per_call, derived)
-    ROWS_JSON.append({"name": name, "us_per_call": round(us_per_call, 1),
-                      "derived": derived})
+def _emit(name: str, us_per_call: float, derived: str = "", **extra):
+    ROWS_JSON.append(emit(name, us_per_call, derived, **extra))
+
+
+def _ingest_run(cfg: StreamConfig, chunks, *, obs_enabled: bool):
+    """One steady-state sustained-ingest measurement on a fresh model
+    (compile cache is shared across runs — shapes are identical)."""
+    obs.set_enabled(obs_enabled)
+    try:
+        model = StreamingBigFCM(cfg)
+        model.ingest(chunks[0])        # compile warm-up (driver + ingest)
+        t0 = time.perf_counter()
+        for x in socket_sim_source(iterator_source(chunks[1:])):
+            model.ingest(x)
+        return time.perf_counter() - t0, model
+    finally:
+        obs.set_enabled(None)          # back to whatever $REPRO_OBS says
 
 
 def run() -> None:
@@ -49,16 +67,16 @@ def run() -> None:
         N_CHUNKS + 1, CHUNK, D, C, drift_at=N_CHUNKS + 1, seed=0)]
     cfg = StreamConfig(n_clusters=C, window=4, max_iter=150,
                        driver_sample=512, seed=0)
-    model = StreamingBigFCM(cfg)
-    model.ingest(chunks[0])            # compile warm-up (driver + ingest)
-
-    t0 = time.perf_counter()
-    for x in socket_sim_source(iterator_source(chunks[1:])):
-        model.ingest(x)
-    dt = time.perf_counter() - t0
     n_rec = N_CHUNKS * CHUNK
-    _emit("stream/ingest", dt / N_CHUNKS * 1e6,
-          f"{n_rec / dt:.0f} records/sec")
+    dt_off, _ = _ingest_run(cfg, chunks, obs_enabled=False)
+    dt_on, model = _ingest_run(cfg, chunks, obs_enabled=True)
+    overhead = (dt_on - dt_off) / dt_off * 100.0
+    _emit("stream/ingest", dt_on / N_CHUNKS * 1e6,
+          f"{n_rec / dt_on:.0f} records/sec", obs="on")
+    _emit("stream/ingest_obs_off", dt_off / N_CHUNKS * 1e6,
+          f"{n_rec / dt_off:.0f} records/sec, "
+          f"obs overhead {overhead:+.1f}%", obs="off",
+          obs_overhead_pct=round(overhead, 1))
 
     st = model.state
     t_merge = timeit(model._jmerge, st.win_centers, st.win_weights)

@@ -98,3 +98,24 @@ counts = np.bincount(labels, minlength=C)
 print(f"out-of-core refit over {store.n_rows} cached rows "
       f"(objective {float(refit.objective):.1f}); archive scored "
       f"chunk-by-chunk, {int((counts > 0).sum())}/{C} clusters occupied.")
+
+# ---------------------------------------------------------------------
+# Everything above was instrumented as it ran: each fit, chunk read,
+# checkpoint save, and per-chunk scoring call fed the `repro.obs`
+# metrics/tracing plane (always on by default; REPRO_OBS=0 turns every
+# instrumentation call into a no-op).  The report below is the
+# Bendechache-style per-phase breakdown — where the wall time went
+# (parse vs sweep vs merge vs checkpoint vs scoring), with p50/p99 per
+# phase derived from log-bucket histograms, plus the cache counters
+# (cold-parse vs warm-mmap bytes show the parse-once story as numbers).
+#
+# Set REPRO_OBS_DIR=/some/dir to ALSO flush these events to
+# <dir>/events.jsonl at exit, then render a finished run post-mortem:
+#     python -m repro.obs.report --jsonl /some/dir/events.jsonl
+from repro import obs                            # noqa: E402
+
+print("\n=== observability report (repro.obs) ===")
+print(obs.render_report(top_events=3))
+p99 = obs.histogram("span.serve.assign").quantile(0.99)
+print(f"\nserve.assign p99 latency: {p99 * 1e3:.2f} ms "
+      "(what the serving plane reads for its SLO)")

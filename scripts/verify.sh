@@ -11,6 +11,11 @@
 #                              # roofline harness in seconds-scale smoke
 #                              # mode (tiny shapes, 1 rep) so the
 #                              # measurement path itself is exercised
+#   scripts/verify.sh obs      # observability-plane tests + a
+#                              # seconds-scale smoke: an instrumented
+#                              # mini-fit flushed to a JSONL sink whose
+#                              # report must render a non-empty phase
+#                              # table
 #
 # Every mode prints the 10 slowest test durations (--durations=10) so
 # the ~27-minute tier-1 budget stays visible as the suite grows.
@@ -40,6 +45,28 @@ case "$mode" in
         rm -rf "$calib"
         exec python -m benchmarks.roofline_table \
           --bench benchmarks/BENCH_roofline_smoke.json ;;
-  *) echo "usage: scripts/verify.sh [fast|full|stream|cache|perf] [pytest args...]" >&2
+  obs) python -m pytest -x -q --durations=10 -m "not slow" \
+         tests/test_obs.py "$@"
+       # smoke: instrumented mini-fit -> JSONL sink -> rendered report
+       # must contain a phase-table row for the engine sweep
+       obsdir="$(mktemp -d)"
+       REPRO_OBS_DIR="$obsdir" python - <<'EOF'
+import numpy as np
+from repro import obs
+from repro.core.bigfcm import BigFCMConfig, bigfcm_fit_store
+from repro.data.cache import ChunkStore
+
+x = np.random.default_rng(0).normal(size=(1000, 3)).astype(np.float32)
+store = ChunkStore.ingest(x, chunk_rows=250)
+bigfcm_fit_store(store, BigFCMConfig(n_clusters=3, max_iter=10,
+                                     sample_size=128, use_driver=False,
+                                     backend="jnp"))
+obs.flush_jsonl()
+EOF
+       python -m repro.obs.report --jsonl "$obsdir/events.jsonl" \
+         | tee /dev/stderr | grep -q "engine.sweep"
+       rm -rf "$obsdir"
+       echo "obs smoke OK: report rendered a non-empty phase table" ;;
+  *) echo "usage: scripts/verify.sh [fast|full|stream|cache|perf|obs] [pytest args...]" >&2
      exit 2 ;;
 esac

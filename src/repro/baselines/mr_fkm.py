@@ -24,11 +24,12 @@ from repro.core.fcm import FCMResult
 from repro.core.outofcore import make_accumulator, ooc_sweep
 from repro.data.plane import batched
 from repro.engine import resolve_backend
+from repro.engine.backend import BackendLike
 
 
-@partial(jax.jit, static_argnames=("m",))
-def _one_sweep(x, w, centers, m: float):
-    v_new, w_i, q = resolve_backend(None).sweep(x, w, centers, m)
+@partial(jax.jit, static_argnames=("m", "be"))
+def _one_sweep(x, w, centers, m: float, be=None):
+    v_new, w_i, q = resolve_backend(be).sweep(x, w, centers, m)
     delta = jnp.max(jnp.sum((v_new - centers) ** 2, axis=-1))
     return v_new, w_i, q, delta
 
@@ -43,6 +44,7 @@ def mr_fuzzy_kmeans(
     mesh: Optional[Mesh] = None,
     data_axes=("data",),
     launch_overhead: float = 0.0,
+    backend: BackendLike = None,
 ):
     """Returns (FCMResult, n_jobs, elapsed_seconds)."""
     if mesh is not None:
@@ -50,12 +52,12 @@ def mr_fuzzy_kmeans(
     w = jnp.ones((x.shape[0],), jnp.float32)
     centers = jnp.asarray(init_centers, jnp.float32)
     # Warm-up compile (excluded from timing, like a warm JVM).
-    jax.block_until_ready(_one_sweep(x, w, centers, m))
+    jax.block_until_ready(_one_sweep(x, w, centers, m, be=backend))
     t0 = time.perf_counter()
     n_jobs, q = 0, jnp.float32(0)
     w_i = jnp.zeros((centers.shape[0],), jnp.float32)
     for it in range(max_iter):
-        centers, w_i, q, delta = _one_sweep(x, w, centers, m)
+        centers, w_i, q, delta = _one_sweep(x, w, centers, m, be=backend)
         # host sync = the reduce job writing to HDFS + driver reading it
         delta = float(delta)
         n_jobs += 1
@@ -75,6 +77,7 @@ def mr_fuzzy_kmeans_store(
     max_iter: int = 1000,
     batch_rows: Optional[int] = None,
     launch_overhead: float = 0.0,
+    backend: BackendLike = None,
 ):
     """The per-iteration-job baseline over a `ChunkStore` — and the
     honest version of the cost the paper attributes to Mahout/Ludwig:
@@ -83,7 +86,7 @@ def mr_fuzzy_kmeans_store(
     out-of-core path reads through the same store but pays its parse
     exactly once up front.  Returns (FCMResult, n_jobs, elapsed)."""
     rows = int(batch_rows or store.chunk_rows)
-    be = resolve_backend(None)
+    be = resolve_backend(backend)
     acc = make_accumulator(be, m)
     centers = jnp.asarray(init_centers, jnp.float32)
     # Warm-up compile on one batch (excluded from timing, warm JVM).

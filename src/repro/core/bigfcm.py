@@ -50,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.compat import shard_map
 from repro.data.cache import ChunkStore
 from repro.data.plane import PartitionPlan, batched, plan_partitions, \
@@ -129,6 +130,9 @@ def run_driver(x_sample: jax.Array, cfg: BigFCMConfig, key: jax.Array):
     t_f = time.perf_counter() - t0
 
     flag = t_f - t_s > 0         # paper line 6: Flag=1 ⇒ FCM to the cache
+    obs.event("engine.driver_race", flag=bool(flag), t_fcm=t_s,
+              t_wfcmpb=t_f, backend=be.name,
+              sample_rows=int(x_sample.shape[0]))
     v_init = res_fcm.centers if flag else res_pb.centers
     return v_init, flag, t_s, t_f
 
@@ -207,6 +211,15 @@ def bigfcm_fit(
                 "store for the in-memory mesh path, or call "
                 "bigfcm_fit_store for shard-planned control")
         return bigfcm_fit_store(x, cfg, key=key)
+    # The whole in-memory fit is one `engine.fit` span (the out-of-core
+    # delegation above gets its own `engine.fit_store` — never both).
+    with obs.span("engine.fit", rows=int(x.shape[0])):
+        return _fit_array(x, cfg, mesh=mesh, data_axes=data_axes,
+                          point_weights=point_weights, key=key)
+
+
+def _fit_array(x, cfg: BigFCMConfig, *, mesh, data_axes, point_weights,
+               key) -> BigFCMResult:
     key = key if key is not None else jax.random.PRNGKey(cfg.seed)
     k_sample, k_seed = jax.random.split(key)
     n = x.shape[0]
@@ -234,6 +247,10 @@ def bigfcm_fit(
                   point_weights=local.center_weights, backend=be)
         diag = BigFCMDiagnostics(flag, t_s, t_f, lam,
                                  local.n_iter[None], red.n_iter)
+        obs.event("engine.fit.done", backend=be.name, path="memory",
+                  flag=bool(flag), objective=float(red.objective),
+                  combiner_iters=int(local.n_iter),
+                  reducer_iters=int(red.n_iter))
         return BigFCMResult(red.centers, red.center_weights, red.objective,
                             diag)
 
@@ -252,6 +269,9 @@ def bigfcm_fit(
     w_sharded = jax.device_put(w, NamedSharding(mesh, P(data_axes)))
     v_rep = jax.device_put(v_init, NamedSharding(mesh, P(None, None)))
     centers, cw, q, iters, r_it = jax.jit(job)(x_sharded, w_sharded, v_rep)
+    obs.event("engine.fit.done", backend=be.name, path="mesh",
+              flag=bool(flag), objective=float(q),
+              reducer_iters=int(r_it))
     diag = BigFCMDiagnostics(flag, t_s, t_f, lam, iters, r_it)
     return BigFCMResult(centers, cw, q, diag)
 
@@ -316,6 +336,13 @@ def bigfcm_fit_store(
     materialized array to float32 summation order; the WFCMPB combiner
     applies on multi-shard plans, mirroring the mesh combiners.
     """
+    with obs.span("engine.fit_store", rows=int(store.n_rows)):
+        return _fit_store(store, cfg, n_shards=n_shards, plan=plan,
+                          batch_rows=batch_rows, key=key)
+
+
+def _fit_store(store: ChunkStore, cfg: BigFCMConfig, *, n_shards, plan,
+               batch_rows, key) -> BigFCMResult:
     key = key if key is not None else jax.random.PRNGKey(cfg.seed)
     k_sample, k_seed = jax.random.split(key)
     n = store.n_rows
@@ -340,15 +367,18 @@ def bigfcm_fit_store(
     acc = make_accumulator(be, cfg.m)  # ONE compile for every shard/pass
     locals_ = []
     for s in shards:                   # empty shards contribute nothing
-        if flag or len(shards) == 1:   # 1 shard ≡ single-device branch
-            loc = ooc_fcm(lambda s=s: shard_batches(store, plan, s, rows),
-                          v_init, m=cfg.m, eps=cfg.combiner_eps,
-                          max_iter=cfg.max_iter, backend=be, acc=acc)
-        else:
-            loc = wfcmpb_store(store, v_init, m=cfg.m,
-                               eps=cfg.combiner_eps, max_iter=cfg.max_iter,
-                               batch_rows=rows, backend=be, plan=plan,
-                               shard=s, with_objective=False)
+        with obs.span("engine.combiner", shard=s):
+            if flag or len(shards) == 1:  # 1 shard ≡ single-device branch
+                loc = ooc_fcm(
+                    lambda s=s: shard_batches(store, plan, s, rows),
+                    v_init, m=cfg.m, eps=cfg.combiner_eps,
+                    max_iter=cfg.max_iter, backend=be, acc=acc)
+            else:
+                loc = wfcmpb_store(store, v_init, m=cfg.m,
+                                   eps=cfg.combiner_eps,
+                                   max_iter=cfg.max_iter, batch_rows=rows,
+                                   backend=be, plan=plan, shard=s,
+                                   with_objective=False)
         locals_.append(loc)
     iters = jnp.stack([loc.n_iter for loc in locals_])
 
@@ -357,19 +387,27 @@ def bigfcm_fit_store(
         # just a polish of the local sketch against itself — identical
         # to the in-memory single-device branch.
         local = locals_[0]
-        red = fcm(local.centers, local.centers, m=cfg.m,
-                  eps=cfg.reducer_eps, max_iter=cfg.max_iter,
-                  point_weights=local.center_weights, backend=be)
+        with obs.span("engine.merge", shards=1):
+            red = fcm(local.centers, local.centers, m=cfg.m,
+                      eps=cfg.reducer_eps, max_iter=cfg.max_iter,
+                      point_weights=local.center_weights, backend=be)
+        obs.event("engine.fit.done", backend=be.name, path="store",
+                  flag=bool(flag), objective=float(red.objective),
+                  reducer_iters=int(red.n_iter))
         diag = BigFCMDiagnostics(flag, t_s, t_f, lam, iters, red.n_iter)
         return BigFCMResult(red.centers, red.center_weights, red.objective,
                             diag)
 
     stacked = Summary(jnp.stack([loc.centers for loc in locals_]),
                       jnp.stack([loc.center_weights for loc in locals_]))
-    red = merge_summaries(stacked, cfg.reducer_plan(), backend=be)
+    with obs.span("engine.merge", shards=len(locals_)):
+        red = merge_summaries(stacked, cfg.reducer_plan(), backend=be)
     # Global objective of the merged centers over the full store — one
     # more chunk pass through the raw accumulate entry (the q output).
     _, _, q = ooc_accumulate(batched(store.iter_chunks(), rows),
                              red.summary.centers, cfg.m, acc=acc)
+    obs.event("engine.fit.done", backend=be.name, path="store",
+              flag=bool(flag), objective=float(q),
+              reducer_iters=int(red.n_iter))
     diag = BigFCMDiagnostics(flag, t_s, t_f, lam, iters, red.n_iter)
     return BigFCMResult(red.summary.centers, red.summary.masses, q, diag)

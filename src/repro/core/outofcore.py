@@ -27,6 +27,7 @@ from typing import Callable, Iterable, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.engine import resolve_backend
 from repro.engine.backend import _D2_FLOOR, BackendLike
 
@@ -62,8 +63,9 @@ def ooc_accumulate(batches: BatchIterable, centers, m: float = 2.0, *,
     v = jnp.asarray(centers, jnp.float32)
     v_num = w_i = q = None
     for x, w in batches:
-        vn, wi, qi = acc(jnp.asarray(x, jnp.float32),
-                         jnp.asarray(w, jnp.float32), v)
+        with obs.span("engine.sweep"):
+            vn, wi, qi = acc(jnp.asarray(x, jnp.float32),
+                             jnp.asarray(w, jnp.float32), v)
         if v_num is None:
             v_num, w_i, q = vn, wi, qi
         else:
@@ -115,7 +117,15 @@ def ooc_fcm(
         delta = float(jnp.max(jnp.sum((v - v_prev) ** 2, axis=-1)))
         if not (n_iter < max_iter and (n_iter == 0 or delta > eps)):
             break
-        v_new, _, _ = ooc_sweep(batches_factory(), v, m, acc=acc)
+        v_new, _, q = ooc_sweep(batches_factory(), v, m, acc=acc)
+        if obs.enabled():
+            # the per-iteration objective/center-shift series — only the
+            # host-orchestrated fit can emit it (in-memory fits converge
+            # inside one XLA while_loop and report fit-level events only)
+            obs.event(
+                "engine.fit.iter", i=n_iter, backend=be.name,
+                objective=float(q),
+                shift=float(jnp.max(jnp.sum((v_new - v) ** 2, axis=-1))))
         v_prev, v = v, v_new
         n_iter += 1
     _, w_final, q = ooc_sweep(batches_factory(), v, m, acc=acc)

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Callable, Iterator, Optional, Sequence, Union
 
 import jax
@@ -36,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
 from .cache import ChunkStore, StoreWriter
 from .plane import batched
 
@@ -214,9 +216,14 @@ class ShardedLoader:
         abandoned epoch sets ``stop`` so the thread retires instead of
         blocking on a full queue forever."""
         def put(item) -> bool:
+            t0 = time.perf_counter()
             while not stop.is_set():
                 try:
                     q.put(item, timeout=0.1)
+                    # time the producer spent blocked on a full queue —
+                    # nonzero means the consumer is the bottleneck
+                    obs.counter("data.loader.producer_stall_s").add(
+                        time.perf_counter() - t0)
                     return True
                 except queue.Full:
                     continue
@@ -271,12 +278,14 @@ class ShardedLoader:
         done = False
         try:
             while True:
+                obs.gauge("data.loader.queue_depth").set(q.qsize())
                 kind, payload = q.get()
                 if kind == "error":
                     raise payload
                 if kind == "eos":
                     done = True
                     break
+                obs.counter("data.loader.batches").add(1)
                 batch, w = payload
                 placed = self._place(batch, w)
                 if collect is not None:
@@ -302,6 +311,7 @@ class ShardedLoader:
         cache = self._device_cache
         generation = self._generation
         for x, w in cache:
+            obs.counter("data.loader.resident_batches").add(1)
             if self._generation != generation:
                 x, w = self._place(x, w)       # device→device re-place
             yield x, w

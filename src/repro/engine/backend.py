@@ -41,11 +41,13 @@ it for the paper-facing API.
 """
 from __future__ import annotations
 
-import warnings
+import importlib
 from typing import Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+
+from repro import obs
 
 _D2_FLOOR = 1e-12  # distance floor: a record sitting exactly on a center
 
@@ -238,20 +240,23 @@ def _probe_kernel_backends() -> None:
     """Import `repro.kernels.ops` once so its backends self-register.
 
     A broken kernels layer (pallas API skew raises beyond ImportError)
-    degrades to the jnp paths — but LOUDLY: one `warnings.warn` carries
-    the original error, so "everything silently runs 50× slower on the
-    reference backend" can't happen without a signal."""
+    degrades to the jnp paths — but LOUDLY: exactly one warning per
+    process, routed through the obs event sink (`obs.warn_once`) with
+    the original import error kept in the event payload, so
+    "everything silently runs 50× slower on the reference backend"
+    can't happen without a signal."""
     global _KERNELS_PROBED
     if _KERNELS_PROBED:
         return
     _KERNELS_PROBED = True
     try:
-        import repro.kernels.ops  # noqa: F401 — registers pallas backends
+        importlib.import_module("repro.kernels.ops")  # registers pallas
     except Exception as e:
-        warnings.warn(
+        obs.warn_once(
+            "kernels_probe_failed",
             "repro.kernels.ops failed to import — Pallas sweep backends "
             f"are unavailable this process; falling back to jnp: {e!r}",
-            RuntimeWarning, stacklevel=3)
+            stacklevel=3, error=repr(e))
 
 
 def available_backends() -> list:
@@ -287,24 +292,19 @@ def default_backend_name() -> str:
     return "jnp"
 
 
-_PERF_WARNED = False
-
-
 def _calibrated_name(shape: Optional[Tuple[int, int, int]]) -> Optional[str]:
     """Measured winner via `repro.perf.calibrate`, or None to fall back
     to the platform rule (calibration disabled / perf layer broken —
     the latter warns once, same contract as the kernels probe)."""
-    global _PERF_WARNED
     try:
         from repro.perf.calibrate import calibrated_backend_name
         name = calibrated_backend_name(shape)
     except Exception as e:
-        if not _PERF_WARNED:
-            _PERF_WARNED = True
-            warnings.warn(
-                "repro.perf calibration failed — backend auto-selection "
-                f"falling back to the platform-name rule: {e!r}",
-                RuntimeWarning, stacklevel=3)
+        obs.warn_once(
+            "perf_calibration_failed",
+            "repro.perf calibration failed — backend auto-selection "
+            f"falling back to the platform-name rule: {e!r}",
+            stacklevel=3, error=repr(e))
         return None
     return name if name in _REGISTRY else None
 

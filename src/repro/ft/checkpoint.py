@@ -30,6 +30,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro import obs
+
 
 def _flatten_with_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
@@ -81,6 +83,12 @@ class CheckpointManager:
             self._pending = None
 
     def _write(self, step: int, host):
+        # runs on the async save thread — span/counter are thread-safe
+        with obs.span("ft.checkpoint.save", step=step):
+            self._write_inner(step, host)
+        obs.counter("ft.checkpoint.saves").add(1)
+
+    def _write_inner(self, step: int, host):
         tmp = os.path.join(self.dir, f"step_{step:010d}.tmp")
         final = os.path.join(self.dir, f"step_{step:010d}")
         os.makedirs(tmp, exist_ok=True)
@@ -129,18 +137,23 @@ class CheckpointManager:
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        d = os.path.join(self.dir, f"step_{step:010d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)["leaves"]
-        leaves, treedef = _flatten_with_paths(tree_like)
-        shard_leaves = None
-        if shardings is not None:
-            shard_leaves = [s for _, s in _flatten_with_paths(shardings)[0]]
-        out = []
-        for i, (key, like) in enumerate(leaves):
-            arr = np.load(os.path.join(d, manifest[key]["file"]))
-            if shard_leaves is not None:
-                out.append(jax.device_put(arr, shard_leaves[i]))
-            else:
-                out.append(jax.numpy.asarray(arr, dtype=like.dtype))
+        with obs.span("ft.checkpoint.restore", step=step):
+            d = os.path.join(self.dir, f"step_{step:010d}")
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)["leaves"]
+            leaves, treedef = _flatten_with_paths(tree_like)
+            shard_leaves = None
+            if shardings is not None:
+                shard_leaves = [s for _, s in
+                                _flatten_with_paths(shardings)[0]]
+            out = []
+            for i, (key, like) in enumerate(leaves):
+                arr = np.load(os.path.join(d, manifest[key]["file"]))
+                if shard_leaves is not None:
+                    out.append(jax.device_put(arr, shard_leaves[i]))
+                else:
+                    out.append(jax.numpy.asarray(arr, dtype=like.dtype))
+        # every restore is a restart in the ft story — the counter PR-8's
+        # runbook reads as "how many times did this job come back up"
+        obs.counter("ft.checkpoint.restores").add(1)
         return jax.tree_util.tree_unflatten(treedef, out)

@@ -24,6 +24,8 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding
 
+from repro import obs
+
 
 def make_mesh_for(devices: Sequence, *, model_parallel: int,
                   pods: int = 1) -> Mesh:
@@ -41,6 +43,10 @@ def make_mesh_for(devices: Sequence, *, model_parallel: int,
 
 def elastic_remesh(state, old_shardings, new_mesh: Mesh):
     """Reshard a live pytree onto a new mesh (same PartitionSpecs)."""
+    obs.counter("ft.elastic.remesh").add(1)
+    obs.event("ft.elastic.remesh",
+              n_devices=int(np.prod(new_mesh.devices.shape)))
+
     def move(x, s):
         spec = s.spec if isinstance(s, NamedSharding) else s
         return jax.device_put(x, NamedSharding(new_mesh, spec))
@@ -74,6 +80,7 @@ class StragglerMonitor:
                         and dt > self.threshold * self.ewma)
         if is_straggler:
             self.flags += 1
+            obs.counter("ft.straggler.flags").add(1)
             if self.on_straggler:
                 self.on_straggler(dt, self.ewma)
         # EWMA excludes flagged outliers so one straggler doesn't mask the

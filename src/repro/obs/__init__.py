@@ -1,0 +1,60 @@
+"""`repro.obs` — the unified metrics/tracing plane (PR 7).
+
+One lightweight, always-on-capable observability layer under every
+other subsystem (engine, data, stream, ft, serve, perf):
+
+  * **metrics** — a process-global registry of counters, gauges, and
+    fixed log-bucket histograms (p50/p99 derivable without storing
+    samples), cheap enough to leave enabled;
+  * **trace** — nestable, thread-safe ``span("stream.ingest")`` timing
+    plus point `event`s, recorded in an in-memory ring buffer and an
+    optional atomic JSONL sink; every span feeds a ``span.<name>``
+    latency histogram for free;
+  * **report** — `snapshot()` and the per-phase breakdown/renderer
+    (``python -m repro.obs.report``).
+
+Environment knobs
+-----------------
+``REPRO_OBS=0``        kill switch: every instrumentation call becomes
+                       a flag-check no-op (`set_enabled` flips it at
+                       runtime; ``None`` re-reads the env).
+``REPRO_OBS_DIR``      when set, `flush_jsonl()` (and an atexit hook)
+                       writes the ring buffer + a final metrics
+                       snapshot to ``<dir>/events.jsonl`` atomically.
+``REPRO_OBS_RING``     ring-buffer capacity (default 4096 events).
+
+This package is pure stdlib — no jax/numpy — so every layer may import
+it unconditionally without cycles or load cost.
+"""
+from .metrics import (Counter, Gauge, Histogram, counter, enabled,
+                      gauge, histogram, set_enabled)
+from .metrics import reset as reset_metrics
+from .metrics import snapshot as metrics_snapshot
+from .trace import (clear, event, flush_jsonl, load_jsonl, ring_events,
+                    set_ring_size, span, warn_once)
+
+# `.report` is loaded lazily (PEP 562): `python -m repro.obs.report`
+# would otherwise trigger runpy's found-in-sys.modules warning.
+_REPORT_NAMES = ("phase_breakdown", "render_report", "snapshot")
+
+
+def __getattr__(name: str):
+    if name in _REPORT_NAMES:
+        from . import report
+        return getattr(report, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "counter", "gauge", "histogram",
+    "enabled", "set_enabled", "reset_metrics", "metrics_snapshot",
+    "phase_breakdown", "render_report", "snapshot",
+    "clear", "event", "flush_jsonl", "load_jsonl", "ring_events",
+    "set_ring_size", "span", "warn_once", "reset_all",
+]
+
+
+def reset_all() -> None:
+    """Fresh telemetry: drop every metric and the event ring (tests;
+    the start of an instrumented run that wants a clean baseline)."""
+    reset_metrics()
+    clear()

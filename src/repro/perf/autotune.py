@@ -23,6 +23,8 @@ from __future__ import annotations
 
 from typing import Dict, Optional, Sequence, Tuple
 
+from repro import obs
+
 TILE_GRID = (512, 1024, 2048)
 LANE_GRID_INTERPRET = (32, 128)
 DEFAULT_BLOCKS = {"tile_n": 1024, "lane": 128}
@@ -86,6 +88,8 @@ def tune_sweep_blocks(shape: Optional[Tuple[int, int, int]] = None, *,
     if best is None:            # every grid point failed: keep defaults
         best = dict(DEFAULT_BLOCKS)
     cfg = {**best, "times_us": times, "tuned_shape": [n, c, d]}
+    obs.event("perf.autotune.tuned", bucket=key, tile_n=best["tile_n"],
+              lane=best["lane"], times_us=times)
     data = load_calibration(path)
     data["tiles"][key] = cfg
     store_calibration(data, path)

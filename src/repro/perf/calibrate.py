@@ -27,6 +27,8 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
+
 FORMAT_VERSION = 1
 CALIB_NAME = "calibration.json"
 ENV_DIR = "REPRO_CALIB_DIR"
@@ -229,6 +231,11 @@ def calibrated_backend_name(shape: Optional[Tuple[int, int, int]] = None,
             _MEMO[key] = hit["winner"]
             return hit["winner"]
     winner, results = race_backends(race_shape(bucket), m=m)
+    obs.event("perf.calibrate.race", bucket=key, winner=winner,
+              times_us={k: round(r["us"], 1) for k, r in results.items()
+                        if "us" in r},
+              parity={k: bool(r.get("parity_ok"))
+                      for k, r in results.items()})
     data = load_calibration(path)   # re-read: keep concurrent winners
     data["winners"][key] = {
         "winner": winner,

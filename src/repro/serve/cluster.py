@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.engine import resolve_backend
 
 
@@ -61,7 +62,12 @@ def assign_stream(model, source, *, soft: bool = False,
         x, ts = chunk if isinstance(chunk, tuple) else (chunk, None)
         x = np.asarray(x, np.float32)
         report = model.ingest(x, ts=ts) if update else None
-        yield np.asarray(model.assign(x, soft=soft)), report
+        # per-chunk scoring latency — the span feeds the
+        # span.serve.assign histogram PR-8's serving plane reads
+        with obs.span("serve.assign", rows=int(x.shape[0])):
+            out = np.asarray(model.assign(x, soft=soft))
+        obs.counter("serve.records").add(int(x.shape[0]))
+        yield out, report
 
 
 def assign_store(store, centers, *, m: float = 2.0, soft: bool = False,
@@ -74,4 +80,8 @@ def assign_store(store, centers, *, m: float = 2.0, soft: bool = False,
     yields for a (n_rows,) / (n_rows, C) result when it fits."""
     fn = make_assigner(centers, m=m, soft=soft, backend=backend)
     for chunk in store.iter_chunks():
-        yield np.asarray(fn(np.asarray(chunk, np.float32)))
+        n = int(chunk.shape[0])
+        with obs.span("serve.assign", rows=n):
+            out = np.asarray(fn(np.asarray(chunk, np.float32)))
+        obs.counter("serve.records").add(n)
+        yield out

@@ -17,7 +17,9 @@ def _blobs(n=1200, d=4, c=3, seed=0):
 def test_fcm_recovers_blob_centers():
     x, y = _blobs()
     v0 = x[:3]
-    res = fcm(x, v0, m=2.0, eps=1e-10, max_iter=500)
+    # f32 oracle: eps=1e-10 is unreachable in bf16, and "auto" may
+    # legitimately pick the bf16 backend on this bucket (PR 6)
+    res = fcm(x, v0, m=2.0, eps=1e-10, max_iter=500, backend="jnp")
     assign = np.asarray(hard_assign(x, res.centers))
     # cluster/label agreement via majority mapping
     acc = 0
@@ -53,8 +55,11 @@ def test_weight_equals_duplication():
     xd = jnp.concatenate([x, x[:10]], axis=0)
     w = jnp.ones(50).at[:10].set(2.0)
     v0 = x[:4]
-    r_dup = fcm(xd, v0, m=2.0, eps=1e-12, max_iter=200)
-    r_w = fcm(x, v0, m=2.0, eps=1e-12, max_iter=200, point_weights=w)
+    # f32 oracle: the 1e-12 convergence threshold and the rtol=1e-4
+    # equivalence are unreachable if "auto" picks the bf16 backend
+    r_dup = fcm(xd, v0, m=2.0, eps=1e-12, max_iter=200, backend="jnp")
+    r_w = fcm(x, v0, m=2.0, eps=1e-12, max_iter=200, point_weights=w,
+              backend="jnp")
     np.testing.assert_allclose(np.asarray(r_dup.centers),
                                np.asarray(r_w.centers), rtol=1e-4,
                                atol=1e-5)

@@ -125,7 +125,9 @@ def test_kernel_inside_full_fcm_loop():
     from repro.core import fcm
     rng = np.random.default_rng(11)
     x = jnp.asarray(rng.normal(size=(600, 8)).astype(np.float32))
-    r_ref = fcm(x, x[:5], m=2.0, eps=1e-8, max_iter=100)
+    # f32 oracle reference: "auto" may pick the bf16 backend (PR 6),
+    # which legitimately converges in a different iteration count
+    r_ref = fcm(x, x[:5], m=2.0, eps=1e-8, max_iter=100, backend="jnp")
     r_k = fcm(x, x[:5], m=2.0, eps=1e-8, max_iter=100, backend="pallas")
     assert int(r_ref.n_iter) == int(r_k.n_iter)
     np.testing.assert_allclose(np.asarray(r_ref.centers),

@@ -235,10 +235,14 @@ def test_wfcmpb_store_matches_in_memory(blob_store):
 def test_mr_fkm_store_matches_in_memory(blob_store):
     x, store = blob_store
     v0 = jnp.asarray(x[:5])
+    # f32 oracle on both sides: "auto" resolves per shape bucket, so
+    # the in-memory and chunked paths could pick different backends
+    # (e.g. bf16 on one) and legitimately diverge in job count
     ref, jobs_ref, _ = mr_fuzzy_kmeans(jnp.asarray(x), v0, m=2.0,
-                                       eps=1e-6, max_iter=60)
+                                       eps=1e-6, max_iter=60,
+                                       backend="jnp")
     got, jobs_got, _ = mr_fuzzy_kmeans_store(store, v0, m=2.0, eps=1e-6,
-                                             max_iter=60)
+                                             max_iter=60, backend="jnp")
     assert jobs_ref == jobs_got
     np.testing.assert_allclose(np.asarray(got.centers),
                                np.asarray(ref.centers), atol=1e-4)

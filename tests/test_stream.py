@@ -111,8 +111,10 @@ def test_window_merge_ignores_phantom_slots():
     win_c, win_w = init_window(4, 4, 3)
     win_c, win_w, cur = push_summary(win_c, win_w, jnp.int32(0),
                                      centers, weights, decay=0.9)
+    # f32 oracle: atol=1e-4 identity, so don't let "auto" pick bf16
     merged_c, merged_w = merge_summaries(
-        window_summary(win_c, win_w), MergePlan("windowed", m=2.0)).summary
+        window_summary(win_c, win_w), MergePlan("windowed", m=2.0),
+        backend="jnp").summary
     # a single live slot merges to itself; phantoms contribute nothing
     np.testing.assert_allclose(np.asarray(merged_c), np.asarray(centers),
                                atol=1e-4)
