@@ -1,0 +1,310 @@
+"""Serving-plane benchmark (PR 8): offered load vs assignment latency.
+
+Four phases over the `repro.serve.ScoringService` front-end:
+
+  * **unloaded**    — one trickling client: the baseline p50 every SLO
+    ratio below is read against;
+  * **load sweep**  — closed-loop client fan-in (1 → high): records/sec
+    plus p50/p99 batch-scoring latency read from
+    ``metrics_snapshot()["histograms"]["span.serve.assign"]`` (the
+    serving-plane SLO series) and end-to-end submit→response latency
+    (``serve.request``);
+  * **per-request** — the same offered load against a
+    ``coalesce=False`` service (one request = one dispatch at its
+    natural shape — what serving WITHOUT shape-bucketed coalescing
+    costs: per-request dispatch overhead plus one XLA compile per
+    distinct request size).  Acceptance:
+    ``coalesced_vs_per_request_speedup ≥ 5``;
+  * **overload (shed)** — a tiny row-bounded queue under aggressive
+    fan-in: the queue-rows gauge must stay at its bound (no unbounded
+    growth, so e2e p99 stays bounded) while sheds are counted and
+    typed;
+  * **hot swap**    — a snapshot swap mid-traffic: zero response
+    errors, and the first request submitted after ``swap()`` returns
+    carries the new version (switch within one batch).
+
+Writes ``benchmarks/BENCH_serve.json``; rows carry the structured
+platform/backend/commit metadata via `benchmarks.common.emit`.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import numpy as np
+
+from repro import obs
+from repro.serve import (CenterSnapshot, Rejected, Scorer,
+                         ScoringService, ServiceConfig)
+
+from .common import emit
+
+SMOKE = os.environ.get("REPRO_SERVE_SMOKE") == "1"
+C, D = 8, 16
+BACKEND = "jnp"
+MAX_BATCH = 4096
+N_REQS = 200 if SMOKE else 1200          # coalesced-phase request count
+N_REQS_PR = 60 if SMOKE else 240         # per-request-phase (compiles!)
+SIZES = 8 if SMOKE else 40               # distinct request row counts
+CLIENTS_SWEEP = (1, 4) if SMOKE else (1, 4, 16)
+ROWS_JSON = []
+
+
+def _emit(name, us, derived="", **extra):
+    ROWS_JSON.append(emit(name, us, derived, backend=BACKEND, **extra))
+
+
+def _request_pool(k, seed):
+    """k requests with a lognormal-ish size mix over SIZES distinct row
+    counts in [16, 1024] — many small, a few big, like real fan-in."""
+    rng = np.random.default_rng(seed)
+    sizes = np.unique(np.clip(
+        np.round(np.exp(rng.uniform(np.log(16), np.log(1024), SIZES))),
+        16, 1024).astype(int))
+    picks = rng.choice(sizes, size=k)
+    return [rng.normal(size=(int(n), D)).astype(np.float32)
+            for n in picks]
+
+
+def _serve_closed_loop(svc, reqs, n_clients):
+    """Closed-loop offered load: ``n_clients`` threads each submit+wait
+    their slice of ``reqs`` as fast as responses come back.  Returns
+    (wall_s, records, errors)."""
+    slices = [reqs[i::n_clients] for i in range(n_clients)]
+    errors, served_rows = [], [0] * n_clients
+
+    def client(i):
+        for r in slices[i]:
+            try:
+                res = svc.score(r, timeout=120)
+                served_rows[i] += res.assignments.shape[0]
+            except Exception as e:      # noqa: BLE001 — counted, reported
+                errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0, sum(served_rows), errors
+
+
+def _span_quantiles():
+    h = obs.metrics_snapshot()["histograms"].get("span.serve.assign")
+    if not h or not h.get("count"):
+        return float("nan"), float("nan")
+    return h["p50"], h["p99"]
+
+
+def _fresh_service(centers, *, n_replicas=1, **cfg_kw):
+    kw = dict(max_batch_rows=MAX_BATCH, bucket_base=64)
+    kw.update(cfg_kw)
+    return ScoringService(
+        [Scorer(CenterSnapshot(0, centers), backend=BACKEND,
+                replica=f"r{i}") for i in range(n_replicas)],
+        ServiceConfig(**kw))
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    centers = (rng.normal(size=(C, D)) * 4.0).astype(np.float32)
+
+    # ---- unloaded baseline: one trickling client ------------------------
+    obs.reset_metrics()
+    svc = _fresh_service(centers)
+    warm = _request_pool(20, seed=99)
+    for r in warm:                       # compile the bucket ladder
+        svc.score(r, timeout=120)
+    obs.reset_metrics()
+    for r in _request_pool(60 if not SMOKE else 20, seed=1):
+        svc.score(r, timeout=120)
+        time.sleep(0.002)                # trickle: no queueing at all
+    p50_unloaded, p99_unloaded = _span_quantiles()
+    # unloaded FULL batch: what one max_batch_rows dispatch costs with
+    # no contention — the apples-to-apples denominator for the overload
+    # p50 SLO (overload batches coalesce to max_batch_rows, so the
+    # small-request trickle p50 above is not the same work)
+    obs.reset_metrics()
+    full = np.zeros((MAX_BATCH, D), np.float32)
+    for _ in range(10 if SMOKE else 30):
+        svc.score(full, timeout=120)
+        time.sleep(0.002)
+    p50_unloaded_full, _ = _span_quantiles()
+    svc.close()
+    _emit("t14/serve_unloaded_p50", p50_unloaded * 1e6,
+          f"p99 {p99_unloaded * 1e6:.0f}us (1 trickling client); "
+          f"full {MAX_BATCH}-row batch p50 "
+          f"{p50_unloaded_full * 1e6:.0f}us")
+
+    # ---- offered-load sweep, coalesced ---------------------------------
+    reqs = _request_pool(N_REQS, seed=2)
+    coalesced_rps = {}
+    sweep_rows = []
+    for n_clients in CLIENTS_SWEEP:
+        obs.reset_metrics()
+        svc = _fresh_service(centers)
+        for r in warm:
+            svc.score(r, timeout=120)
+        obs.reset_metrics()
+        wall, rows, errors = _serve_closed_loop(svc, reqs, n_clients)
+        assert not errors, errors[:3]
+        p50, p99 = _span_quantiles()
+        he2e = obs.metrics_snapshot()["histograms"]["serve.request"]
+        svc.close()
+        rps = rows / wall
+        coalesced_rps[n_clients] = rps
+        sweep_rows.append({
+            "clients": n_clients, "records_per_sec": round(rps),
+            "assign_p50_us": round(p50 * 1e6, 1),
+            "assign_p99_us": round(p99 * 1e6, 1),
+            "e2e_p50_us": round(he2e["p50"] * 1e6, 1),
+            "e2e_p99_us": round(he2e["p99"] * 1e6, 1)})
+        _emit(f"t14/serve_coalesced_c{n_clients}", wall * 1e6 / len(reqs),
+              f"{rps:.0f} records/sec, assign p99 {p99 * 1e3:.2f}ms",
+              clients=n_clients)
+
+    # ---- per-request dispatch baseline (coalesce=False) -----------------
+    hi = CLIENTS_SWEEP[-1]
+    reqs_pr = _request_pool(N_REQS_PR, seed=2)
+    obs.reset_metrics()
+    svc = _fresh_service(centers, coalesce=False)
+    wall, rows, errors = _serve_closed_loop(svc, reqs_pr, hi)
+    assert not errors, errors[:3]
+    svc.close()
+    pr_rps = rows / wall
+    speedup = coalesced_rps[hi] / pr_rps
+    _emit(f"t14/serve_per_request_c{hi}", wall * 1e6 / len(reqs_pr),
+          f"{pr_rps:.0f} records/sec (one dispatch per request)",
+          clients=hi)
+    _emit("t14/coalesced_vs_per_request", 0.0,
+          f"{speedup:.1f}x records/sec at {hi} clients")
+
+    # ---- overload: shed policy bounds the queue ------------------------
+    queue_rows = 4096
+    obs.reset_metrics()
+    svc = _fresh_service(centers, policy="shed", queue_rows=queue_rows)
+    for r in warm:
+        svc.score(r, timeout=120)
+    obs.reset_metrics()
+    shed = [0] * 8                       # per-thread: no racy +=
+
+    n_flood = 8                          # 8 threads x 8-req bursts of
+    bursts = 8 if SMOKE else 25          # 256 rows = 16384 rows offered
+    flood_reqs = [np.random.default_rng(100 + i)
+                  .normal(size=(256, D)).astype(np.float32)
+                  for i in range(n_flood)]
+
+    def flood(i):
+        # open-loop-ish: burst 8 requests at a time so offered rows far
+        # exceed queue_rows — the shed policy must absorb the excess.
+        # Data is pre-generated so submitters don't steal worker CPU.
+        for _ in range(bursts):
+            futs = []
+            for _ in range(8):
+                try:
+                    futs.append(svc.submit(flood_reqs[i]))
+                except Rejected:
+                    shed[i] += 1
+            for f in futs:
+                f.result(timeout=120)
+
+    threads = [threading.Thread(target=flood, args=(i,))
+               for i in range(n_flood)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    n_shed = sum(shed)
+    p50_shed, p99_shed = _span_quantiles()
+    snap = obs.metrics_snapshot()
+    q_max = snap["gauges"]["serve.queue_rows"]["max"]
+    e2e_p99 = snap["histograms"]["serve.request"]["p99"]
+    svc.close()
+    queue_bounded = q_max <= queue_rows
+    # SLO ratio vs the same-size unloaded batch: overload dispatches are
+    # full max_batch_rows batches, so that's the fair denominator
+    p50_ratio = p50_shed / p50_unloaded_full
+    _emit("t14/serve_shed_overload", p99_shed * 1e6,
+          f"{n_shed} shed, queue max {q_max:.0f}/{queue_rows} rows, "
+          f"e2e p99 {e2e_p99 * 1e3:.1f}ms, p50 {p50_ratio:.2f}x "
+          "unloaded full-batch")
+
+    # ---- hot swap under sustained traffic ------------------------------
+    obs.reset_metrics()
+    svc = _fresh_service(centers, n_replicas=2)
+    for r in warm:
+        svc.score(r, timeout=120)
+    swapped = centers[::-1].copy()
+    errors, versions = [], []
+    stop = threading.Event()
+
+    def churn(i):
+        rngc = np.random.default_rng(200 + i)
+        while not stop.is_set():
+            try:
+                res = svc.score(rngc.normal(size=(128, D)
+                                            ).astype(np.float32),
+                                timeout=120)
+                versions.append(res.version)
+            except Exception as e:      # noqa: BLE001 — the acceptance
+                errors.append(e)
+
+    threads = [threading.Thread(target=churn, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    time.sleep(0.3)
+    svc.swap(1, swapped)
+    # the first request submitted AFTER swap() returns must be scored
+    # against the new snapshot — the "within one batch" acceptance
+    marker = svc.score(np.zeros((64, D), np.float32), timeout=120)
+    time.sleep(0.3)
+    stop.set()
+    for t in threads:
+        t.join()
+    svc.close()
+    swap_ok = marker.version == 1
+    served_v0 = sum(1 for v in versions if v == 0)
+    served_v1 = sum(1 for v in versions if v == 1)
+    _emit("t14/serve_hot_swap", 0.0,
+          f"{served_v0}->{served_v1} responses across swap, "
+          f"{len(errors)} errors, next-batch version ok={swap_ok}")
+
+    out = os.path.join(os.path.dirname(__file__),
+                       "BENCH_serve_smoke.json" if SMOKE
+                       else "BENCH_serve.json")
+    with open(out, "w") as f:
+        json.dump({
+            "bench": "t14_serve", "c": C, "d": D,
+            "max_batch_rows": MAX_BATCH, "backend": BACKEND,
+            "smoke": SMOKE,
+            "unloaded_assign_p50_us": round(p50_unloaded * 1e6, 1),
+            "unloaded_full_batch_p50_us":
+                round(p50_unloaded_full * 1e6, 1),
+            "load_sweep": sweep_rows,
+            "per_request_records_per_sec": round(pr_rps),
+            "coalesced_vs_per_request_speedup": round(speedup, 1),
+            "shed": {"queue_rows": queue_rows, "shed_count": n_shed,
+                     "queue_rows_max": q_max,
+                     "queue_bounded": bool(queue_bounded),
+                     "e2e_p99_ms": round(e2e_p99 * 1e3, 2),
+                     "assign_p50_vs_unloaded_full_batch":
+                         round(p50_ratio, 2)},
+            "hot_swap": {"errors": len(errors),
+                         "responses_old_version": served_v0,
+                         "responses_new_version": served_v1,
+                         "next_batch_new_version": bool(swap_ok)},
+            "rows": ROWS_JSON}, f, indent=2)
+    print(f"wrote {out} (coalesced/per-request = {speedup:.1f}x, "
+          f"queue bounded = {queue_bounded}, swap errors = {len(errors)})")
+    assert queue_bounded, "shed policy failed to bound the queue"
+    assert speedup >= 5, f"coalescing speedup {speedup:.1f}x < 5x"
+    assert not errors, "hot swap produced response errors"
+    assert swap_ok, "post-swap response did not see the new snapshot"
+
+
+if __name__ == "__main__":
+    run()

@@ -16,6 +16,11 @@
 #                              # mini-fit flushed to a JSONL sink whose
 #                              # report must render a non-empty phase
 #                              # table
+#   scripts/verify.sh serve    # serving-plane tests + a seconds-scale
+#                              # smoke: start a ScoringService, fire
+#                              # concurrent clients at it, assert the
+#                              # serve.assign p99 is present in the obs
+#                              # snapshot and zero responses dropped
 #
 # Every mode prints the 10 slowest test durations (--durations=10) so
 # the ~27-minute tier-1 budget stays visible as the suite grows.
@@ -67,6 +72,44 @@ EOF
          | tee /dev/stderr | grep -q "engine.sweep"
        rm -rf "$obsdir"
        echo "obs smoke OK: report rendered a non-empty phase table" ;;
-  *) echo "usage: scripts/verify.sh [fast|full|stream|cache|perf|obs] [pytest args...]" >&2
+  serve) python -m pytest -x -q --durations=10 -m "not slow" \
+           tests/test_serve.py "$@"
+         # smoke: live service under concurrent clients — the SLO p99
+         # must be readable from the obs snapshot, nothing dropped
+         python - <<'EOF'
+import threading
+import numpy as np
+from repro import obs
+from repro.serve import (CenterSnapshot, Scorer, ScoringService,
+                         ServiceConfig)
+
+centers = np.random.default_rng(0).normal(size=(4, 8)).astype(np.float32)
+svc = ScoringService([Scorer(CenterSnapshot(0, centers), backend="jnp")],
+                     ServiceConfig(max_batch_rows=1024, bucket_base=64))
+done, errors = [], []
+
+def client(i):
+    rng = np.random.default_rng(i)
+    for _ in range(20):
+        try:
+            res = svc.score(rng.normal(size=(int(rng.integers(8, 400)), 8)
+                                       ).astype(np.float32), timeout=60)
+            done.append(res.assignments.shape[0])
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+threads = [threading.Thread(target=client, args=(i,)) for i in range(6)]
+[t.start() for t in threads]
+[t.join() for t in threads]
+svc.close()
+assert not errors, errors[:3]
+assert len(done) == 120, f"dropped responses: {120 - len(done)}"
+h = obs.metrics_snapshot()["histograms"]["span.serve.assign"]
+assert h["count"] > 0 and h["p99"] > 0, h
+print(f"serve smoke OK: 120 responses, 0 dropped, "
+      f"p99 {h['p99']*1e3:.2f} ms over {h['count']} batches")
+EOF
+         ;;
+  *) echo "usage: scripts/verify.sh [fast|full|stream|cache|perf|obs|serve] [pytest args...]" >&2
      exit 2 ;;
 esac

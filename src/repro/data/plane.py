@@ -100,6 +100,50 @@ def batched(chunks: Iterable[np.ndarray], batch_rows: int
                                np.zeros((pad,), np.float32)]))
 
 
+def pad_rows(x: np.ndarray, rows: int) -> np.ndarray:
+    """Pad ``(n, d)`` to ``(rows, d)`` with phantom zero rows.
+
+    The fixed-shape idiom every consumer shares: the caller keeps ``n``
+    and slices the first ``n`` output rows back out (scoring) or pairs
+    the pad with zero weights (accumulation) — either way the phantom
+    rows never influence a result.  Returns ``x`` unchanged (modulo
+    float32 coercion) when it is already ``rows`` tall."""
+    x = np.asarray(x, np.float32)
+    n = x.shape[0]
+    if n == rows:
+        return x
+    if n > rows:
+        raise ValueError(f"pad_rows: {n} rows do not fit in {rows}")
+    return np.concatenate(
+        [x, np.zeros((rows - n, x.shape[1]), np.float32)])
+
+
+def shape_buckets(max_rows: int, *, base: int = 64,
+                  factor: int = 2) -> Tuple[int, ...]:
+    """The row-count bucket ladder ``base, base·factor, … , max_rows``
+    (``max_rows`` always included).  Fixed-shape device batches are
+    padded up to the smallest bucket that fits (`bucket_for`), so XLA
+    compiles one program per bucket — never one per request size."""
+    if max_rows <= 0 or base <= 0 or factor < 2:
+        raise ValueError(f"bad bucket ladder max_rows={max_rows} "
+                         f"base={base} factor={factor}")
+    out = []
+    b = base
+    while b < max_rows:
+        out.append(b)
+        b *= factor
+    out.append(max_rows)
+    return tuple(out)
+
+
+def bucket_for(n: int, buckets: Tuple[int, ...]) -> int:
+    """Smallest bucket ≥ ``n`` (``buckets`` ascending)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"{n} rows exceed the largest bucket {buckets[-1]}")
+
+
 def shard_batches(store: ChunkStore, plan: PartitionPlan, shard: int,
                   batch_rows: int
                   ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:

@@ -129,6 +129,26 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def restore_arrays(self, step: Optional[int] = None) -> dict:
+        """Template-free restore: every leaf as a host numpy array keyed
+        by its flattened path, shapes/dtypes read straight off the
+        manifest.  This is the self-describing path for consumers that
+        cannot know shapes ahead of time — a scorer replica following a
+        streaming learner whose center count grows and shrinks
+        (birth/death) boots from whatever the manifest says, no
+        template pytree required."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        with obs.span("ft.checkpoint.restore", step=step):
+            d = os.path.join(self.dir, f"step_{step:010d}")
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)["leaves"]
+            out = {key: np.load(os.path.join(d, spec["file"]))
+                   for key, spec in manifest.items()}
+        obs.counter("ft.checkpoint.restores").add(1)
+        return out
+
     def restore(self, tree_like: Any, step: Optional[int] = None,
                 shardings: Any = None) -> Any:
         """Restore into the structure of ``tree_like``.  If ``shardings``

@@ -23,6 +23,25 @@ Environment knobs
                        snapshot to ``<dir>/events.jsonl`` atomically.
 ``REPRO_OBS_RING``     ring-buffer capacity (default 4096 events).
 
+Label schema
+------------
+Metrics are keyed by ``(name, labels)``: ``counter("x", k="v")`` is an
+independent series from the unlabeled ``counter("x")``, rendered as
+``x{k=v}`` in snapshots/reports.  Spans follow the same rule via
+``span(name, labels={...})``: the duration always feeds the unlabeled
+``span.<name>`` histogram (the AGGREGATE series — SLO readers key on
+it, e.g. ``span.serve.assign`` p99) and additionally a labeled
+``span.<name>{k=v}`` series per label set.  Conventions in use:
+
+  * ``replica=<id>`` — the serving plane's scorer replica: the
+    `repro.serve.service` workers label ``span.serve.assign``,
+    ``serve.records``, and ``serve.batches`` with the replica id so
+    per-replica throughput/latency separate cleanly in `obs.report`;
+    the unlabeled ``serve.records`` series is the single-process
+    library path (`assign_stream`/`assign_store`).
+  * ``backend=<name>`` — engine events carry the resolved sweep
+    backend as an event field (not a metric label).
+
 This package is pure stdlib — no jax/numpy — so every layer may import
 it unconditionally without cycles or load cost.
 """

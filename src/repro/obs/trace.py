@@ -100,11 +100,12 @@ def event(name: str, **fields) -> None:
 
 
 class _Span:
-    __slots__ = ("name", "fields", "_t0", "_parent")
+    __slots__ = ("name", "fields", "labels", "_t0", "_parent")
 
-    def __init__(self, name: str, fields: dict):
+    def __init__(self, name: str, fields: dict, labels: Optional[dict]):
         self.name = name
         self.fields = fields
+        self.labels = labels
 
     def __enter__(self) -> "_Span":
         stack = getattr(_tls, "stack", None)
@@ -119,11 +120,19 @@ class _Span:
         dur = time.perf_counter() - self._t0
         _tls.stack.pop()
         ev = dict(self.fields)
+        if self.labels:
+            ev.update(self.labels)
         ev.update(kind="span", name=self.name, ts=time.time(),
                   dur_s=dur, parent=self._parent,
                   thread=threading.current_thread().name)
         _append(ev)
+        # the unlabeled histogram is the aggregate series (what SLO
+        # readers key on); labels add a parallel per-label series —
+        # e.g. span.serve.assign{replica=r1} next to span.serve.assign
         metrics.histogram("span." + self.name).observe(dur)
+        if self.labels:
+            metrics.histogram("span." + self.name,
+                              **self.labels).observe(dur)
         return False
 
 
@@ -140,11 +149,17 @@ class _NullSpan:
 _NULL_SPAN = _NullSpan()
 
 
-def span(name: str, **fields):
-    """Context manager timing a named scope; see module docstring."""
+def span(name: str, labels: Optional[dict] = None, **fields):
+    """Context manager timing a named scope; see module docstring.
+
+    ``labels`` (a dict, e.g. ``{"replica": "r1"}``) additionally feeds
+    a labeled ``span.<name>{k=v}`` histogram next to the unlabeled
+    aggregate, so per-replica/per-backend latency separates cleanly in
+    `obs.report`; the label values are also attached to the ring event.
+    """
     if not metrics.enabled():
         return _NULL_SPAN
-    return _Span(name, fields)
+    return _Span(name, fields, labels)
 
 
 # ----------------------------------------------------------- warn-once ---

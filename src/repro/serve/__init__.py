@@ -1,5 +1,13 @@
 from .cluster import assign_store, assign_stream, make_assigner
 from .decode import make_serve_step, make_prefill, greedy_generate
+from .scorer import (CenterSnapshot, Scorer, SnapshotPublisher,
+                     snapshot_from_checkpoint)
+from .service import (DeadlineExceeded, Rejected, ScoreResult,
+                      ScoringService, ServiceClosed, ServiceConfig)
 
 __all__ = ["assign_store", "assign_stream", "make_assigner",
-           "make_serve_step", "make_prefill", "greedy_generate"]
+           "make_serve_step", "make_prefill", "greedy_generate",
+           "CenterSnapshot", "Scorer", "SnapshotPublisher",
+           "snapshot_from_checkpoint",
+           "DeadlineExceeded", "Rejected", "ScoreResult",
+           "ScoringService", "ServiceClosed", "ServiceConfig"]

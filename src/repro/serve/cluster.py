@@ -26,7 +26,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.data.plane import pad_rows
 from repro.engine import resolve_backend
+
+
+class _Assigner:
+    """The callable `make_assigner` returns: a jitted scorer plus a
+    trace counter (``.traces``) so compile-count regression tests can
+    assert one-program-per-shape without jax internals."""
+
+    __slots__ = ("_fn", "traces")
+
+    def __init__(self, score):
+        self.traces = 0
+
+        def counted(x):
+            self.traces += 1          # trace-time only: one per compile
+            return score(x)
+
+        self._fn = jax.jit(counted)
+
+    def __call__(self, x):
+        return self._fn(jnp.asarray(x, jnp.float32))
 
 
 def make_assigner(centers, *, m: float = 2.0, soft: bool = False,
@@ -35,13 +56,15 @@ def make_assigner(centers, *, m: float = 2.0, soft: bool = False,
 
     ``backend`` names the engine sweep backend to score through
     (None/"auto" = the platform default — the same resolution rule the
-    learner uses)."""
+    learner uses).  The returned callable exposes ``.traces``, the
+    number of programs XLA compiled for it — callers that keep input
+    shapes fixed (bucketed batches, padded store chunks) should see it
+    stay at one per shape."""
     be = resolve_backend(backend)
     v = jnp.asarray(centers, jnp.float32)
     if soft:
-        return jax.jit(lambda x: be.soft_assign(
-            jnp.asarray(x, jnp.float32), v, m))
-    return jax.jit(lambda x: be.hard_assign(jnp.asarray(x, jnp.float32), v))
+        return _Assigner(lambda x: be.soft_assign(x, v, m))
+    return _Assigner(lambda x: be.hard_assign(x, v))
 
 
 def assign_stream(model, source, *, soft: bool = False,
@@ -71,17 +94,26 @@ def assign_stream(model, source, *, soft: bool = False,
 
 
 def assign_store(store, centers, *, m: float = 2.0, soft: bool = False,
-                 backend=None) -> Iterator[np.ndarray]:
+                 backend=None, assigner=None) -> Iterator[np.ndarray]:
     """Score every record of a `ChunkStore` against frozen ``centers``.
 
     Yields one assignment array per cache chunk, in store row order —
     out-of-core: only one chunk is resident at a time, so a store
     larger than memory scores in O(chunk) space.  Concatenate the
-    yields for a (n_rows,) / (n_rows, C) result when it fits."""
-    fn = make_assigner(centers, m=m, soft=soft, backend=backend)
+    yields for a (n_rows,) / (n_rows, C) result when it fits.  Pass a
+    prebuilt ``assigner`` (from `make_assigner`) to reuse its compiled
+    program across stores/calls (its ``.traces`` then counts compiles
+    across all of them — every chunk is padded to the store's chunk
+    shape, so one store costs one program)."""
+    fn = (assigner if assigner is not None
+          else make_assigner(centers, m=m, soft=soft, backend=backend))
+    rows = int(store.chunk_rows)
     for chunk in store.iter_chunks():
         n = int(chunk.shape[0])
+        # pad the ragged tail chunk to the full chunk shape (phantom
+        # zero rows, sliced back off below) so the whole store scores
+        # through ONE compiled program instead of two
         with obs.span("serve.assign", rows=n):
-            out = np.asarray(fn(np.asarray(chunk, np.float32)))
+            out = np.asarray(fn(pad_rows(chunk, rows)))[:n]
         obs.counter("serve.records").add(n)
         yield out

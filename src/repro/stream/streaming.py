@@ -210,6 +210,7 @@ class StreamingBigFCM:
         self.data_axes = tuple(data_axes)
         self.state: Optional[StreamState] = None
         self.detector = DriftDetector(cfg.drift)
+        self._snapshot_listeners: list = []
         self.backend = resolve_backend(cfg.backend)
         be = self.backend
         # Driver config for (re)seeding: the paper's FCM-vs-WFCMPB race.
@@ -382,7 +383,28 @@ class StreamingBigFCM:
         if rep.reseeded:
             obs.counter("stream.reseeds").add(1)
         obs.gauge("stream.n_centers").set(rep.n_centers)
+        if self._snapshot_listeners:
+            self._publish_snapshot()
         return rep
+
+    # ---------------------------------------------------- serve snapshots --
+    def add_snapshot_listener(self, fn) -> None:
+        """Register ``fn(version, centers, weights)`` to run after every
+        ingest with a host copy of the freshest windowed model — the
+        serving plane's snapshot publication hook (pass
+        ``serve.SnapshotPublisher.publish`` to fan snapshots out to
+        hot-swapping scorer replicas).  ``version`` is the stream step,
+        monotone across re-seeds; ``centers`` may grow/shrink between
+        calls (birth/death)."""
+        self._snapshot_listeners.append(fn)
+
+    def _publish_snapshot(self) -> None:
+        st = self.state
+        version = int(st.step)
+        centers = np.asarray(st.centers)
+        weights = np.asarray(st.weights)
+        for fn in self._snapshot_listeners:
+            fn(version, centers, weights)
 
     def _ingest(self, x, w=None, *, ts=None) -> IngestReport:
         x, w = self._place(x, w)

@@ -1,0 +1,396 @@
+"""Serving plane (PR 8): batched scoring service, hot-swap replicas,
+shape-bucket padding, and the overload policies.
+
+Covers the ISSUE-8 satellite checklist: shed bounds queue depth with a
+typed rejection; queue policy preserves request→response ordering and
+bit-for-bit exactness vs per-request scoring; a hot-swap mid-traffic
+never tears a response across snapshot versions; the ragged store tail
+scores through one compiled program; per-replica obs labels.
+"""
+import tempfile
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.data import ChunkStore, bucket_for, pad_rows, shape_buckets
+from repro.ft import CheckpointManager
+from repro.serve import (CenterSnapshot, DeadlineExceeded, Rejected,
+                         Scorer, ScoringService, ServiceClosed,
+                         ServiceConfig, SnapshotPublisher, assign_store,
+                         make_assigner, snapshot_from_checkpoint)
+from repro.stream import StreamConfig, StreamingBigFCM
+
+RNG = np.random.default_rng(0)
+D = 6
+
+
+@pytest.fixture(autouse=True)
+def _fresh_obs():
+    obs.reset_all()
+    yield
+    obs.reset_all()
+
+
+def _centers(c=5, seed=0):
+    return (np.random.default_rng(seed).normal(size=(c, D)) * 4.0
+            ).astype(np.float32)
+
+
+def _reqs(k, lo=1, hi=200, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(size=(int(n), D)).astype(np.float32)
+            for n in rng.integers(lo, hi, size=k)]
+
+
+class GatedScorer(Scorer):
+    """Blocks every score call on an event — backs up the queue so
+    overload-policy tests are deterministic."""
+
+    def __init__(self, *a, **k):
+        self.gate = threading.Event()
+        super().__init__(*a, **k)
+
+    def score(self, x, snap=None):
+        self.gate.wait(10)
+        return super().score(x, snap)
+
+
+class PoisonScorer(Scorer):
+    def score(self, x, snap=None):
+        raise ValueError("poisoned scorer")
+
+
+# ------------------------------------------------------- bucket helpers --
+
+def test_shape_bucket_ladder():
+    assert shape_buckets(4096, base=64) == (64, 128, 256, 512, 1024,
+                                            2048, 4096)
+    assert shape_buckets(100, base=64) == (64, 100)   # max always in
+    assert shape_buckets(32, base=64) == (32,)
+    assert bucket_for(1, (64, 128)) == 64
+    assert bucket_for(64, (64, 128)) == 64
+    assert bucket_for(65, (64, 128)) == 128
+    with pytest.raises(ValueError):
+        bucket_for(129, (64, 128))
+
+
+def test_pad_rows_phantom():
+    x = RNG.normal(size=(3, D)).astype(np.float32)
+    p = pad_rows(x, 8)
+    assert p.shape == (8, D)
+    assert np.array_equal(p[:3], x) and not p[3:].any()
+    assert pad_rows(x, 3) is not x or True     # same-rows passthrough ok
+    with pytest.raises(ValueError):
+        pad_rows(x, 2)
+
+
+# ------------------------------------------------- coalescing exactness --
+
+def test_coalesced_equals_per_request_bit_for_bit():
+    """The batching acceptance: coalesced, padded, bucketed scoring
+    equals the per-request result after unpadding — hard labels
+    bit-for-bit; soft membership floats to the ulp (row position
+    inside a differently-shaped XLA batch may flip the last bit of a
+    float, never a label)."""
+    centers = _centers()
+    for soft in (False, True):
+        svc = ScoringService(
+            Scorer(CenterSnapshot(0, centers), soft=soft, backend="jnp"),
+            ServiceConfig(max_batch_rows=512, bucket_base=32))
+        with svc:
+            reqs = _reqs(40)
+            futs = [svc.submit(r) for r in reqs]
+            ref_fn = make_assigner(centers, soft=soft, backend="jnp")
+            for r, f in zip(reqs, futs):
+                res = f.result(30)
+                ref = np.asarray(ref_fn(r))
+                if soft:
+                    np.testing.assert_allclose(res.assignments, ref,
+                                               rtol=0, atol=1e-6)
+                else:
+                    assert np.array_equal(res.assignments, ref)
+                assert res.version == 0 and res.replica == "r0"
+
+
+def test_oversized_request_spans_buckets_one_version():
+    """A request bigger than max_batch_rows is sliced across several
+    fixed-shape dispatches against ONE snapshot read."""
+    centers = _centers()
+    svc = ScoringService(Scorer(CenterSnapshot(7, centers), backend="jnp"),
+                         ServiceConfig(max_batch_rows=256, bucket_base=64))
+    with svc:
+        big = RNG.normal(size=(1000, D)).astype(np.float32)
+        res = svc.score(big, timeout=30)
+    assert res.assignments.shape == (1000,)
+    assert res.version == 7
+    assert np.array_equal(res.assignments,
+                          np.asarray(make_assigner(centers,
+                                                   backend="jnp")(big)))
+
+
+def test_queue_policy_preserves_fifo_ordering():
+    order = []
+    svc = ScoringService(Scorer(CenterSnapshot(0, _centers()),
+                                backend="jnp"),
+                         ServiceConfig(max_batch_rows=128, policy="queue"))
+    with svc:
+        futs = []
+        for i, r in enumerate(_reqs(30, lo=1, hi=60)):
+            f = svc.submit(r)
+            f.add_done_callback(lambda _f, i=i: order.append(i))
+            futs.append(f)
+        for f in futs:
+            f.result(30)
+    assert order == sorted(order)
+
+
+# ------------------------------------------------------------- overload --
+
+def test_shed_policy_bounds_queue_and_rejects_typed():
+    scorer = GatedScorer(CenterSnapshot(0, _centers()), backend="jnp")
+    cfg = ServiceConfig(max_batch_rows=64, queue_rows=256, policy="shed")
+    svc = ScoringService(scorer, cfg)
+    x = np.zeros((64, D), np.float32)
+    admitted = [svc.submit(x)]          # taken by the (gated) worker
+    time.sleep(0.1)                     # let the worker pick it up
+    shed = 0
+    for _ in range(20):
+        try:
+            admitted.append(svc.submit(x))
+        except Rejected as e:
+            shed += 1
+            assert e.limit_rows == 256
+            assert e.queued_rows + 64 > 256
+    assert shed > 0                     # overload actually shed
+    # the queue never grew past the row bound
+    assert obs.gauge("serve.queue_rows").max <= 256
+    assert obs.counter("serve.shed").value == shed
+    scorer.gate.set()                   # drain: everything admitted serves
+    for f in admitted:
+        assert f.result(30).assignments.shape == (64,)
+    svc.close()
+    snap = obs.metrics_snapshot()
+    assert snap["counters"]["serve.served{replica=r0}"] == len(admitted)
+
+
+def test_queue_policy_deadline_is_typed_and_bounded():
+    scorer = GatedScorer(CenterSnapshot(0, _centers()), backend="jnp")
+    cfg = ServiceConfig(max_batch_rows=64, queue_rows=128,
+                        policy="queue", deadline_s=0.2)
+    svc = ScoringService(scorer, cfg)
+    x = np.zeros((64, D), np.float32)
+    f0 = svc.submit(x)                  # worker takes it, blocks on gate
+    time.sleep(0.1)
+    f1 = svc.submit(x)                  # fills the queue (64+64 > 128-64)
+    f2 = svc.submit(x)
+    t0 = time.monotonic()
+    with pytest.raises(DeadlineExceeded):
+        svc.submit(x)
+    assert 0.1 < time.monotonic() - t0 < 2.0
+    assert obs.counter("serve.deadline_expired").value == 1
+    scorer.gate.set()
+    for f in (f0, f1, f2):
+        f.result(30)
+    svc.close()
+
+
+def test_scoring_failure_propagates_never_hangs():
+    """The ShardedLoader contract: a poisoned scorer fails the batch's
+    futures, fails everything queued, and later submits raise — no
+    client ever blocks forever."""
+    scorer = PoisonScorer(CenterSnapshot(0, _centers()), backend="jnp")
+    svc = ScoringService(scorer, ServiceConfig(max_batch_rows=64))
+    futs = [svc.submit(np.zeros((32, D), np.float32)) for _ in range(4)]
+    for f in futs:
+        with pytest.raises(ValueError, match="poisoned"):
+            f.result(30)
+    # the failure latches: submitting into a dead service raises loud
+    with pytest.raises(RuntimeError):
+        for _ in range(50):
+            svc.submit(np.zeros((8, D), np.float32)).result(30)
+            time.sleep(0.01)
+
+
+def test_close_rejects_new_and_drains_or_fails_pending():
+    svc = ScoringService(Scorer(CenterSnapshot(0, _centers()),
+                                backend="jnp"), ServiceConfig())
+    f = svc.submit(np.zeros((8, D), np.float32))
+    svc.close()                          # drain=True serves the pending
+    assert f.result(10).assignments.shape == (8,)
+    with pytest.raises(ServiceClosed):
+        svc.submit(np.zeros((8, D), np.float32))
+
+
+def test_submit_validates_shape_fast():
+    svc = ScoringService(Scorer(CenterSnapshot(0, _centers()),
+                                backend="jnp"), ServiceConfig())
+    with svc:
+        with pytest.raises(ValueError, match="dim"):
+            svc.submit(np.zeros((4, D + 1), np.float32))
+        with pytest.raises(ValueError):
+            svc.submit(np.zeros((0, D), np.float32))
+        # a 1-row vector request is promoted to (1, d)
+        assert svc.score(np.zeros((D,), np.float32),
+                         timeout=30).assignments.shape == (1,)
+
+
+# ------------------------------------------------------------- hot swap --
+
+def test_hot_swap_mid_traffic_no_torn_reads():
+    """Every response is scored against exactly one snapshot version:
+    under concurrent swaps, assignments must match that version's
+    reference bit-for-bit; after the last swap, responses switch to the
+    newest snapshot within one batch."""
+    base = _centers(c=6, seed=3)
+    versions = {v: np.roll(base, v, axis=0) for v in range(4)}
+    refs = {v: make_assigner(c, backend="jnp") for v, c in versions.items()}
+    svc = ScoringService(
+        [Scorer(CenterSnapshot(0, base), backend="jnp", replica=f"r{i}")
+         for i in range(2)],
+        ServiceConfig(max_batch_rows=256, bucket_base=64))
+    reqs = _reqs(120, lo=4, hi=120, seed=5)
+    results = []
+    stop = threading.Event()
+
+    def swapper():
+        v = 0
+        while not stop.is_set():
+            v = (v + 1) % 4
+            svc.swap(v, versions[v])
+            time.sleep(0.002)
+
+    t = threading.Thread(target=swapper)
+    t.start()
+    try:
+        futs = [svc.submit(r) for r in reqs]
+        results = [f.result(30) for f in futs]
+    finally:
+        stop.set()
+        t.join()
+    for r, res in zip(reqs, results):
+        assert res.version in versions
+        assert np.array_equal(res.assignments,
+                              np.asarray(refs[res.version](r))), \
+            f"torn read: response does not match version {res.version}"
+    # final swap: the very next dispatched batch sees the new snapshot
+    svc.swap(99, versions[1])
+    assert svc.score(reqs[0], timeout=30).version == 99
+    svc.close()
+
+
+def test_swap_handles_grown_and_shrunk_center_counts():
+    svc = ScoringService(Scorer(CenterSnapshot(0, _centers(c=4)),
+                                backend="jnp"),
+                         ServiceConfig(max_batch_rows=128))
+    with svc:
+        x = RNG.normal(size=(32, D)).astype(np.float32)
+        svc.swap(1, _centers(c=7, seed=9))       # grown
+        assert int(svc.score(x, 30).assignments.max()) <= 6
+        svc.swap(2, _centers(c=3, seed=9))       # shrunk
+        assert int(svc.score(x, 30).assignments.max()) <= 2
+
+
+# ------------------------------------------------------ compile economy --
+
+def test_assign_store_ragged_tail_compiles_one_program():
+    """The satellite fix: a store whose tail chunk is short used to
+    compile two programs (full + ragged shape); padding the tail to the
+    chunk shape makes it one."""
+    x = RNG.normal(size=(1000, D)).astype(np.float32)   # 3×300 + 100 tail
+    store = ChunkStore.ingest(x, chunk_rows=300)
+    centers = _centers()
+    fn = make_assigner(centers, backend="jnp")
+    out = np.concatenate(list(assign_store(store, centers, assigner=fn)))
+    assert fn.traces == 1
+    assert out.shape == (1000,)
+    # parity with direct scoring (phantom rows sliced back off)
+    assert np.array_equal(out, np.asarray(make_assigner(
+        centers, backend="jnp")(x)))
+
+
+def test_service_compiles_once_per_bucket():
+    svc = ScoringService(Scorer(CenterSnapshot(0, _centers()),
+                                backend="jnp"),
+                         ServiceConfig(max_batch_rows=256, bucket_base=64))
+    with svc:
+        for r in _reqs(60, lo=1, hi=250, seed=7):
+            svc.score(r, timeout=30)
+        traces = svc.compile_counts()["r0"]
+    assert traces <= len(svc.buckets)    # one program per bucket, max
+
+
+# ------------------------------------------------- snapshots/publishing --
+
+def test_publisher_follows_stream_and_persists_manifest():
+    """Learner → publisher → replicas + checkpoint: scorers follow each
+    ingest's snapshot; a replica in another process boots the latest
+    version from the self-describing manifest (grown/shrunk C safe)."""
+    cfg = StreamConfig(n_clusters=3, window=2, driver_sample=64,
+                       max_iter=40, backend="jnp", seed=0)
+    model = StreamingBigFCM(cfg)
+    with tempfile.TemporaryDirectory() as tmp:
+        ckpt = CheckpointManager(tmp, async_save=False)
+        pub = SnapshotPublisher(ckpt=ckpt)
+        model.add_snapshot_listener(pub.publish)
+        rng = np.random.default_rng(2)
+        rep = None
+        for _ in range(3):
+            rep = model.ingest(rng.normal(size=(256, D)).astype(np.float32))
+        # a scorer attached late catches up to the latest snapshot
+        s = Scorer(CenterSnapshot(-1, np.zeros((1, D), np.float32)),
+                   backend="jnp", replica="late")
+        pub.attach(s)
+        assert s.version == rep.step
+        np.testing.assert_array_equal(
+            np.asarray(pub.latest().centers),
+            np.asarray(model.state.centers))
+        # manifest boot path — shapes come from the manifest, no template
+        boot = snapshot_from_checkpoint(ckpt)
+        assert boot.version == rep.step
+        np.testing.assert_array_equal(boot.centers,
+                                      np.asarray(model.state.centers))
+        assert boot.weights is not None
+        # grown center count round-trips as-is
+        pub.publish(100, _centers(c=9, seed=4))
+        assert snapshot_from_checkpoint(ckpt).centers.shape == (9, D)
+        assert s.version == 100
+
+
+def test_restore_arrays_template_free():
+    with tempfile.TemporaryDirectory() as tmp:
+        ckpt = CheckpointManager(tmp, async_save=False)
+        ckpt.save(5, {"centers": _centers(c=4), "extra": np.arange(3)})
+        arrs = ckpt.restore_arrays()
+        assert set(arrs) == {"centers", "extra"}
+        assert arrs["centers"].shape == (4, D)
+        with pytest.raises(FileNotFoundError):
+            CheckpointManager(tmp + "/empty").restore_arrays()
+
+
+# ------------------------------------------------------------ obs labels --
+
+def test_per_replica_labels_and_aggregate_histogram():
+    svc = ScoringService(
+        [Scorer(CenterSnapshot(0, _centers()), backend="jnp",
+                replica=f"r{i}") for i in range(2)],
+        ServiceConfig(max_batch_rows=128))
+    with svc:
+        futs = [svc.submit(r) for r in _reqs(40, seed=11, hi=100)]
+        total = sum(f.result(30).assignments.shape[0] for f in futs)
+    snap = obs.metrics_snapshot()
+    # the unlabeled aggregate the SLO reads, plus per-replica series
+    agg = snap["histograms"]["span.serve.assign"]
+    assert agg["count"] > 0 and np.isfinite(agg["p99"])
+    per = [k for k in snap["histograms"]
+           if k.startswith("span.serve.assign{replica=")]
+    assert per                                   # at least one replica
+    assert sum(snap["histograms"][k]["count"] for k in per) \
+        == agg["count"]
+    rec = [v for k, v in snap["counters"].items()
+           if k.startswith("serve.records{replica=")]
+    assert sum(rec) == total
+    # e2e request latency histogram resolves per response
+    assert snap["histograms"]["serve.request"]["count"] == len(futs)
