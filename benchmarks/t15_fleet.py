@@ -1,0 +1,181 @@
+"""Fleet scaling bench (PR 9, `repro.fleet`) — t4's datasize story
+taken out-of-core and multi-host.
+
+Writes ``benchmarks/BENCH_fleet.json``:
+
+  * an on-disk `ChunkStore` at ≥10× the fleet's resident budget (the
+    per-shard pin budget + one streaming batch) — every shard fit runs
+    through the streaming fallback, never materializing a shard;
+  * per-host `FleetHost.local_fit` / objective-pass seconds for
+    H ∈ {1, 2, 4} simulated hosts, measured SEQUENTIALLY (this box has
+    one core — timing threads would charge every host for its peers'
+    compute, which is exactly the lie the t4 ``hadoop_model`` idiom
+    exists to avoid).  Modeled fleet wall =
+    max(host fit s) + merge s + max(host objective s) — hosts fit in
+    parallel in a real fleet, the pairwise merge runs replicated;
+  * exchange frame bytes, f32 vs quantized bf16 wire (the only bytes a
+    real fleet moves), and the merged objective's parity against the
+    H=1 fit.
+
+Smoke mode (``REPRO_PERF_SMOKE=1``, used by ``scripts/verify.sh
+fleet``): a tiny store, same code path, ``BENCH_fleet_smoke.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core import BigFCMConfig, driver_seeds
+from repro.core.outofcore import ooc_accumulate
+from repro.data import ChunkStore, make_blobs
+from repro.data.plane import shard_batches
+from repro.engine import concat as concat_summaries
+from repro.engine import merge_summaries
+from repro.fleet import FleetConfig, FleetHost, MailboxTransport, \
+    encode_summary
+
+from .common import emit, wall
+
+SMOKE = os.environ.get("REPRO_PERF_SMOKE", "") not in ("", "0")
+
+ROWS_N = 40_000 if SMOKE else 2_400_000
+DIM = 8
+CHUNK_ROWS = 2048 if SMOKE else 4096
+PREFETCH_BYTES = 64 * 2 ** 10 if SMOKE else 2 ** 20   # per-shard pin budget
+HOSTS = [1, 2] if SMOKE else [1, 2, 4]
+
+CFG = BigFCMConfig(n_clusters=6, m=2.0, use_driver=False,
+                   sample_size=1024, seed=0, backend="jnp")
+
+
+def _hosts(store, n_hosts):
+    fleet = FleetConfig(n_hosts=n_hosts, shards_per_host=1,
+                        prefetch_bytes=PREFETCH_BYTES)
+    tr = MailboxTransport()
+    return [FleetHost(h, store, CFG, fleet, tr) for h in range(n_hosts)]
+
+
+def run():
+    out = {"bench": "t15_fleet", "smoke": SMOKE, "rows": [],
+           "hosts": HOSTS, "n_rows": ROWS_N, "dim": DIM}
+    x, _ = make_blobs(ROWS_N, DIM, CFG.n_clusters, seed=11)
+    with tempfile.TemporaryDirectory(prefix="t15_fleet_") as root:
+        store = ChunkStore.ingest(x, chunk_rows=CHUNK_ROWS, cache_dir=root)
+        del x
+        # resident budget: the pin budget + one streaming batch — what a
+        # host holds of the DATA at any instant (summaries are ~KB)
+        batch_bytes = CHUNK_ROWS * DIM * 4
+        resident = PREFETCH_BYTES + batch_bytes
+        ratio = store.nbytes / resident
+        out["store_bytes"] = store.nbytes
+        out["resident_budget_bytes"] = resident
+        out["ooc_ratio"] = ratio
+        emit("t15/ooc_ratio", 0.0,
+             f"store={store.nbytes / 2**20:.1f}MiB resident="
+             f"{resident / 2**20:.2f}MiB ratio={ratio:.1f}x")
+        assert SMOKE or ratio >= 10.0, ratio
+
+        seeds = driver_seeds(store, CFG)
+        # warm the jit caches (batch shapes are identical across H) so
+        # the H=1 row isn't charged the compiles — common.wall rationale
+        warm = _hosts(store, HOSTS[-1])[0]
+        warm_stack = warm.local_fit(seeds)
+        ooc_accumulate(shard_batches(store, warm.plan, 0, warm.batch_rows),
+                       np.asarray(warm_stack.centers[0]), CFG.m,
+                       acc=warm.acc)
+
+        walls = {}
+        for n_hosts in HOSTS:
+            hosts = _hosts(store, n_hosts)
+            # phase 1 — local combiner fits, one host at a time
+            stacks, fit_s = [], []
+            for h in hosts:
+                t0 = wall(lambda h=h: stacks.append(h.local_fit(seeds)),
+                          warmup=0)
+                fit_s.append(t0)
+                emit(f"t15/h{n_hosts}/host{h.host_id}_fit", t0 * 1e6,
+                     f"shards={h.my_shards()} rows={h.my_rows()}",
+                     backend=CFG.backend)
+            # phase 2 — the replicated pairwise merge every host runs
+            gathered = concat_summaries(stacks)
+            merged = merge_summaries(gathered, hosts[0].merge_plan,
+                                     backend=hosts[0].backend)
+            t_merge = wall(lambda: merge_summaries(
+                gathered, hosts[0].merge_plan, backend=hosts[0].backend))
+            centers = np.asarray(merged.summary.centers)
+            # phase 3 — the distributed objective pass
+            # time each host's accumulate directly — `global_objective`
+            # would block on the gather of hosts not yet run
+            obj_s, q_total, rows_total = [], 0.0, 0
+            for h in hosts:
+                part = []
+
+                def one_host(h=h):
+                    q, r = 0.0, 0
+                    for s in h.my_shards():
+                        _, _, qs = ooc_accumulate(
+                            shard_batches(h.store, h.plan, s, h.batch_rows),
+                            centers, CFG.m, acc=h.acc)
+                        q += float(qs)
+                        r += h.plan.shard_rows[s]
+                    return q, r
+
+                t0 = wall(lambda: part.append(one_host()), warmup=0)
+                q_h, r_h = part[-1]
+                q_total += q_h
+                rows_total += r_h
+                obj_s.append(t0)
+            assert rows_total == store.n_rows
+            # exchange bytes — the only inter-host traffic
+            fp = hosts[0].plan.fingerprint()
+            f32_b = sum(len(encode_summary(s, wire="f32", fingerprint=fp))
+                        for s in stacks)
+            bf16_b = sum(len(encode_summary(s, wire="bf16", fingerprint=fp))
+                         for s in stacks)
+            modeled = max(fit_s) + t_merge + max(obj_s)
+            walls[n_hosts] = modeled
+            row = {"n_hosts": n_hosts, "fit_s": fit_s, "merge_s": t_merge,
+                   "objective_s": obj_s, "modeled_wall_s": modeled,
+                   "objective": q_total, "exchange_bytes_f32": f32_b,
+                   "exchange_bytes_bf16": bf16_b}
+            out["rows"].append(row)
+            emit(f"t15/h{n_hosts}/modeled_wall", modeled * 1e6,
+                 f"max_fit={max(fit_s):.2f}s merge={t_merge * 1e3:.1f}ms "
+                 f"max_obj={max(obj_s):.2f}s q={q_total:.1f}",
+                 backend=CFG.backend)
+            emit(f"t15/h{n_hosts}/exchange_bytes", 0.0,
+                 f"f32={f32_b} bf16={bf16_b} "
+                 f"({bf16_b / max(f32_b, 1):.2f}x)")
+
+        # scaling + parity derived rows
+        q1 = out["rows"][0]["objective"]
+        fit1 = max(out["rows"][0]["fit_s"])
+        for row in out["rows"]:
+            h = row["n_hosts"]
+            row["speedup_vs_h1"] = walls[1] / walls[h]
+            row["parallel_efficiency"] = row["speedup_vs_h1"] / h
+            # the data-scaling phase alone (merge cost is O(H), not O(N))
+            row["fit_speedup_vs_h1"] = fit1 / max(row["fit_s"])
+            row["objective_rel_vs_h1"] = abs(row["objective"] - q1) / q1
+            emit(f"t15/h{h}/scaling", 0.0,
+                 f"speedup={row['speedup_vs_h1']:.2f}x "
+                 f"(fit-only {row['fit_speedup_vs_h1']:.2f}x) "
+                 f"efficiency={row['parallel_efficiency']:.0%} "
+                 f"q_rel_vs_h1={row['objective_rel_vs_h1']:.2e}")
+            assert row["objective_rel_vs_h1"] < 1e-4, row
+
+    # smoke runs must not clobber the committed full-measurement artifact
+    path = os.path.join(os.path.dirname(__file__),
+                        "BENCH_fleet_smoke.json" if SMOKE
+                        else "BENCH_fleet.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {path}")
+    return out["rows"]
+
+
+if __name__ == "__main__":
+    run()

@@ -21,6 +21,14 @@
 #                              # concurrent clients at it, assert the
 #                              # serve.assign p99 is present in the obs
 #                              # snapshot and zero responses dropped
+#   scripts/verify.sh fleet    # fleet correctness tests (wire codec,
+#                              # 1/2/4-host parity, straggler eviction,
+#                              # partition-plan purity properties) + a
+#                              # seconds-scale REAL-process smoke: a
+#                              # 2-process fleet over a shared on-disk
+#                              # store must converge with survivors
+#                              # bit-identical (the kill-one-host
+#                              # article is the `slow` marked suite)
 #
 # Every mode prints the 10 slowest test durations (--durations=10) so
 # the ~27-minute tier-1 budget stays visible as the suite grows.
@@ -110,6 +118,43 @@ print(f"serve smoke OK: 120 responses, 0 dropped, "
       f"p99 {h['p99']*1e3:.2f} ms over {h['count']} batches")
 EOF
          ;;
-  *) echo "usage: scripts/verify.sh [fast|full|stream|cache|perf|obs|serve] [pytest args...]" >&2
+  fleet) python -m pytest -x -q --durations=10 -m "not slow" \
+           tests/test_fleet.py tests/test_plan_property.py "$@"
+         # smoke: a REAL 2-process fleet (spawn + DirTransport mailboxes
+         # + parent death-watch) over a shared on-disk store — survivors
+         # must publish bit-identical results.  Must be a real file with
+         # a __main__ guard: mp spawn re-imports the parent's main
+         # module in every child (a heredoc's <stdin> has no path).
+         smoke="$(mktemp --suffix=.py)"
+         cat > "$smoke" <<'EOF'
+import os
+import tempfile
+
+import numpy as np
+from repro.data import ChunkStore, make_blobs
+from repro.fleet import collect_results, run_fleet
+
+if __name__ == "__main__":
+    root = tempfile.mkdtemp(prefix="fleet_smoke_")
+    store_dir = os.path.join(root, "store")
+    fleet_dir = os.path.join(root, "run")
+    os.makedirs(fleet_dir)
+    x, _ = make_blobs(8000, 6, 4, seed=5)
+    ChunkStore.ingest(x, chunk_rows=1024, cache_dir=store_dir)
+    cfg_kw = dict(n_clusters=4, use_driver=False, sample_size=256,
+                  seed=0, backend="jnp")
+    res = run_fleet(2, store_dir, fleet_dir, cfg_kw=cfg_kw,
+                    fleet_kw=dict(shards_per_host=2), timeout_s=300)
+    assert list(res["live"]) == [0, 1], res["live"]
+    assert int(res["n_rows"]) == 8000
+    assert np.isfinite(float(res["objective"]))
+    both = collect_results(fleet_dir, 2)
+    assert np.array_equal(both[0]["centers"], both[1]["centers"])
+    print(f"fleet smoke OK: 2 processes converged bit-identically, "
+          f"q={float(res['objective']):.1f}")
+EOF
+         python "$smoke"
+         rm -f "$smoke" ;;
+  *) echo "usage: scripts/verify.sh [fast|full|stream|cache|perf|obs|serve|fleet] [pytest args...]" >&2
      exit 2 ;;
 esac

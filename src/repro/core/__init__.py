@@ -3,7 +3,7 @@ from .fcm import (FCMResult, fcm, wfcm, fcm_sweep, membership_terms,
 from .outofcore import make_accumulator, ooc_accumulate, ooc_fcm, ooc_sweep
 from .wfcmpb import wfcmpb, wfcmpb_batches, wfcmpb_store
 from .bigfcm import (BigFCMConfig, BigFCMResult, bigfcm_fit,
-                     bigfcm_fit_store, run_driver)
+                     bigfcm_fit_store, driver_seeds, run_driver)
 from .sampling import parker_hall_sample_size, thompson_sample_size
 
 __all__ = [
@@ -12,5 +12,5 @@ __all__ = [
     "make_accumulator", "ooc_accumulate", "ooc_fcm", "ooc_sweep",
     "wfcmpb", "wfcmpb_batches", "wfcmpb_store",
     "BigFCMConfig", "BigFCMResult", "bigfcm_fit", "bigfcm_fit_store",
-    "run_driver", "parker_hall_sample_size", "thompson_sample_size",
+    "driver_seeds", "run_driver", "parker_hall_sample_size", "thompson_sample_size",
 ]

@@ -137,6 +137,40 @@ def run_driver(x_sample: jax.Array, cfg: BigFCMConfig, key: jax.Array):
     return v_init, flag, t_s, t_f
 
 
+def driver_seeds(store: ChunkStore, cfg: BigFCMConfig, *,
+                 key: Optional[jax.Array] = None) -> np.ndarray:
+    """Derive the driver's seed centers from a store with ZERO
+    coordination — the fleet entry point.
+
+    Every fleet host calls this independently and must land on
+    bit-identical seeds, so the wall-clock FCM-vs-WFCMPB race of
+    `run_driver` cannot apply: two hosts can legitimately time the race
+    differently and diverge.  The race is pinned to Flag=1 (plain FCM
+    pre-clustering, the paper's common case) — same sample
+    (`store.take` of the same Parker–Hall indices), same seeds, same
+    deterministic XLA program, so N hosts agree without exchanging a
+    byte.  With ``cfg.use_driver=False`` this is the Table-2 random-seed
+    ablation (equally deterministic).
+    """
+    key = key if key is not None else jax.random.PRNGKey(cfg.seed)
+    k_sample, k_seed = jax.random.split(key)
+    n = store.n_rows
+    lam = cfg.sample_size or parker_hall_sample_size(
+        cfg.n_clusters, cfg.r, cfg.alpha)
+    lam = min(lam, n)
+    x_sample = jnp.asarray(store.take(_sample_rows(k_sample, n, lam)))
+    idx = jax.random.choice(k_seed, x_sample.shape[0], (cfg.n_clusters,),
+                            replace=False)
+    seeds = jnp.take(x_sample, idx, axis=0)
+    if not cfg.use_driver:
+        return np.asarray(seeds)
+    be = resolve_backend(cfg.backend, shape=(x_sample.shape[0],
+                                             cfg.n_clusters, store.dim))
+    res = fcm(x_sample, seeds, m=cfg.m, eps=cfg.driver_eps,
+              max_iter=cfg.max_iter, backend=be)
+    return np.asarray(res.centers)
+
+
 def _initial_centers(x_sample: jax.Array, cfg: BigFCMConfig, k_seed):
     """Driver race (lines 1–6), or the Table-2 random-seed ablation —
     shared by the in-memory and out-of-core fit paths."""

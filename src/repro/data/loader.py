@@ -18,7 +18,9 @@ device-resident and later epochs replay them with zero host work.
 Production features:
   * double-buffered prefetch (overlap host parse with device compute),
   * producer failures propagate: an exception in the source re-raises
-    in the consumer instead of dying in the daemon thread,
+    in the consumer instead of dying in the daemon thread — including
+    mid-`reshard`; a producer that dies without even forwarding raises
+    a loud RuntimeError in the consumer rather than hanging it,
   * deterministic resharding when the mesh changes size (elastic
     scaling) — the device-resident cache is invalidated, the store is
     not,
@@ -250,11 +252,13 @@ class ShardedLoader:
     # -- device side ---------------------------------------------------------
 
     def _place(self, batch: np.ndarray, w: np.ndarray):
-        if self.mesh is not None:
-            spec = NamedSharding(self.mesh, P(self.data_axes))
-            return (jax.device_put(batch, spec),
-                    jax.device_put(w, NamedSharding(self.mesh,
-                                                    P(self.data_axes))))
+        # one snapshot of (mesh, axes): a concurrent reshard() from an
+        # elastic watcher thread must never split a batch and its
+        # weights across two meshes
+        mesh, axes = self.mesh, self.data_axes
+        if mesh is not None:
+            spec = NamedSharding(mesh, P(axes))
+            return jax.device_put(batch, spec), jax.device_put(w, spec)
         return jnp.asarray(batch), jnp.asarray(w)
 
     def _epoch(self, chunk_iter, *, writer, apply_transform):
@@ -276,10 +280,25 @@ class ShardedLoader:
             [] if (self._cache or self._store is not None) else None
         nbytes = 0
         done = False
+        pump = self._pump_thread
         try:
             while True:
                 obs.gauge("data.loader.queue_depth").set(q.qsize())
-                kind, payload = q.get()
+                try:
+                    kind, payload = q.get(timeout=1.0)
+                except queue.Empty:
+                    # The producer forwards every failure as an "error"
+                    # item — but if the thread itself dies without
+                    # managing even that (e.g. an interpreter-level
+                    # failure, or a bug in the forwarding path under a
+                    # concurrent reshard), an unguarded q.get() would
+                    # hang this consumer forever.  Fail loud instead.
+                    if not pump.is_alive() and q.empty():
+                        raise RuntimeError(
+                            "ShardedLoader: producer thread died without "
+                            "delivering end-of-stream or an error — "
+                            "epoch batches were lost") from None
+                    continue
                 if kind == "error":
                     raise payload
                 if kind == "eos":

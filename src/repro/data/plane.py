@@ -20,6 +20,7 @@ new shard count.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import heapq
 from typing import Iterable, Iterator, Tuple
 
@@ -44,6 +45,18 @@ class PartitionPlan:
     @property
     def n_rows(self) -> int:
         return sum(self.shard_rows)
+
+    def fingerprint(self) -> str:
+        """A short content hash of the whole plan.  Fleet hosts stamp it
+        on every summary they exchange: since the plan is a pure
+        function of (chunking, n_shards), any fingerprint mismatch
+        means two hosts are *not* looking at the same store/shard-count
+        and the merge would be silently wrong — the exchange fails loud
+        instead."""
+        h = hashlib.sha256()
+        h.update(repr((self.n_shards, self.assignment,
+                       self.shard_rows)).encode())
+        return h.hexdigest()[:16]
 
 
 def plan_partitions(store: ChunkStore, n_shards: int) -> PartitionPlan:

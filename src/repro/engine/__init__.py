@@ -25,8 +25,8 @@ from .backend import (Bf16Backend, JnpBackend, SweepBackend,
                       register_backend, resolve_backend, soft_assign)
 from .merge import (TOPOLOGIES, MergePlan, MergeResult, fcm_converge,
                     merge_summaries)
-from .summary import (Summary, phantom, slot_masses, stack, summary,
-                      total_mass)
+from .summary import (Summary, concat, phantom, slot_masses, stack,
+                      summary, total_mass)
 
 __all__ = [
     "Bf16Backend", "JnpBackend", "SweepBackend", "available_backends",
@@ -35,6 +35,6 @@ __all__ = [
     "hard_assign", "membership_terms", "normalize_accumulators",
     "pairwise_sqdist", "register_backend", "resolve_backend",
     "soft_assign", "TOPOLOGIES", "MergePlan", "MergeResult",
-    "fcm_converge", "merge_summaries", "Summary", "phantom",
+    "fcm_converge", "merge_summaries", "Summary", "concat", "phantom",
     "slot_masses", "stack", "summary", "total_mass",
 ]

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 
 from .backend import BackendLike, normalize_accumulators, resolve_backend
 from .summary import Summary, slot_masses
+from .summary import concat as concat_summaries
 from .summary import stack as stack_summaries
 
 TOPOLOGIES = ("flat", "pairwise", "windowed")
@@ -169,8 +170,10 @@ def merge_summaries(
     """Collapse a stack of (centers, masses) summaries into one.
 
     ``summaries`` is a `Summary` with a leading slot axis — (S, C, d)
-    centers, (S, C) masses — or a sequence of single summaries (stacked
-    here).  ``init`` overrides the plan's seed rule with explicit
+    centers, (S, C) masses — or a sequence of summaries, each a single
+    (C, d) sketch or an (S_i, C, d) stack, concatenated here along the
+    slot axis (the fleet-exchange shape: one variable-size stack per
+    host).  ``init`` overrides the plan's seed rule with explicit
     reducer-WFCM seed centers (e.g. the paper's V_1, or the previous
     level of a hierarchical reduce); it applies to the single-WFCM
     topologies only — ``pairwise`` seeds every pair with the heavier
@@ -182,7 +185,9 @@ def merge_summaries(
     conserve mass (Σ_i u^m < 1 for m > 1; see module docstring).
     """
     if not isinstance(summaries, Summary):
-        summaries = stack_summaries(list(summaries))
+        # concat ≡ stack for all-single sequences, and additionally
+        # admits per-element stacks of differing slot counts
+        summaries = concat_summaries(list(summaries))
     if summaries.centers.ndim != 3:
         raise ValueError("merge_summaries expects stacked (S, C, d) "
                          f"summaries, got centers {summaries.centers.shape}")

@@ -40,6 +40,22 @@ def stack(summaries: Sequence[Summary]) -> Summary:
                    jnp.stack([s.masses for s in summaries]))
 
 
+def concat(summaries: Sequence[Summary]) -> Summary:
+    """Concatenate summaries along the slot axis — (S_i, C, d) stacks
+    and/or single (C, d) summaries (promoted to one-slot stacks) become
+    one (ΣS_i, C, d) stack.  This is the fleet-exchange shape: each host
+    contributes a stack of per-shard sketches of *its own* size, and the
+    merge runs over the concatenation.  Zero-slot stacks are legal and
+    vanish (a host that owns no shards on a small store)."""
+    cs = [s.centers if s.centers.ndim == 3 else s.centers[None]
+          for s in summaries]
+    ms = [s.masses if s.masses.ndim == 2 else s.masses[None]
+          for s in summaries]
+    if not cs:
+        raise ValueError("concat: empty summary sequence")
+    return Summary(jnp.concatenate(cs, axis=0), jnp.concatenate(ms, axis=0))
+
+
 def phantom(n_clusters: int, d: int, *, slots: int = 0) -> Summary:
     """All-zero summary (or ``slots`` of them): contributes nothing to any
     merge — the reset/init value for ring buffers and scan carries."""

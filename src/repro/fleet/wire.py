@@ -1,0 +1,79 @@
+"""Summary wire codec — how fleet hosts put sketches on the network.
+
+A fleet exchange moves **summary stacks** ((S, C, d) centers +
+(S, C) masses — a few KB regardless of how many records produced
+them), so the codec is deliberately tiny: a magic tag, a JSON header
+(shapes, wire dtype, an optional partition-plan fingerprint), then the
+raw array bytes.  No pickle — frames are inspectable, and a host never
+executes anything it gathered.
+
+Compression is the `repro.train.dp` trick applied to summaries instead
+of gradients: cast to the wire dtype *before* the bytes leave the host
+(``wire="bf16"`` halves the frame vs ``"f32"``), upcast to float32 on
+decode.  bfloat16 keeps float32's exponent range and rounds the
+significand to 8 bits, so round-to-nearest encode obeys the elementwise
+bound
+
+    |decode(encode(x)) - x| ≤ 2⁻⁸·|x|        (= eps_bf16 / 2)
+
+which `tests/test_fleet.py` pins explicitly.  Unlike the gradient path
+there is no error-feedback loop here — a summary is exchanged once per
+fit, not iterated — so the bound above is the whole story.
+"""
+from __future__ import annotations
+
+import json
+import struct
+from typing import Optional, Tuple
+
+import ml_dtypes
+import numpy as np
+
+from repro import obs
+from repro.engine import Summary
+
+MAGIC = b"FLW1"
+WIRE_DTYPES = {
+    "f32": np.dtype(np.float32),
+    "bf16": np.dtype(ml_dtypes.bfloat16),
+}
+# round-to-nearest into bf16's 8-bit significand: rel err ≤ eps/2 = 2^-8
+BF16_REL_BOUND = 2.0 ** -8
+
+
+def encode_summary(s: Summary, *, wire: str = "f32",
+                   fingerprint: Optional[str] = None) -> bytes:
+    """Frame a summary (single or stacked) for the wire."""
+    if wire not in WIRE_DTYPES:
+        raise ValueError(f"unknown wire dtype {wire!r}; "
+                         f"one of {sorted(WIRE_DTYPES)}")
+    dt = WIRE_DTYPES[wire]
+    centers = np.asarray(s.centers, np.float32)
+    masses = np.asarray(s.masses, np.float32)
+    header = json.dumps({
+        "wire": wire,
+        "centers": list(centers.shape),
+        "masses": list(masses.shape),
+        "plan": fingerprint,
+    }).encode()
+    frame = (MAGIC + struct.pack("<I", len(header)) + header
+             + centers.astype(dt).tobytes() + masses.astype(dt).tobytes())
+    obs.counter("fleet.exchange.bytes", wire=wire).add(len(frame))
+    return frame
+
+
+def decode_summary(frame: bytes) -> Tuple[Summary, Optional[str]]:
+    """Inverse of `encode_summary` → (float32 Summary, fingerprint)."""
+    if frame[:4] != MAGIC:
+        raise ValueError("not a fleet summary frame (bad magic)")
+    (hlen,) = struct.unpack("<I", frame[4:8])
+    header = json.loads(frame[8:8 + hlen].decode())
+    dt = WIRE_DTYPES[header["wire"]]
+    c_shape = tuple(header["centers"])
+    m_shape = tuple(header["masses"])
+    body = frame[8 + hlen:]
+    n_c = int(np.prod(c_shape, dtype=np.int64)) * dt.itemsize
+    centers = np.frombuffer(body[:n_c], dt).astype(np.float32)
+    masses = np.frombuffer(body[n_c:], dt).astype(np.float32)
+    return (Summary(centers.reshape(c_shape), masses.reshape(m_shape)),
+            header.get("plan"))

@@ -1,4 +1,5 @@
 from .checkpoint import CheckpointManager
-from .elastic import StragglerMonitor, elastic_remesh
+from .elastic import StragglerMonitor, detect_stragglers, elastic_remesh
 
-__all__ = ["CheckpointManager", "StragglerMonitor", "elastic_remesh"]
+__all__ = ["CheckpointManager", "StragglerMonitor", "detect_stragglers",
+           "elastic_remesh"]

@@ -17,8 +17,9 @@ job by more than the iteration budget.
 from __future__ import annotations
 
 import math
+import statistics
 import time
-from typing import Callable, Optional, Sequence
+from typing import Callable, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -51,6 +52,39 @@ def elastic_remesh(state, old_shardings, new_mesh: Mesh):
         spec = s.spec if isinstance(s, NamedSharding) else s
         return jax.device_put(x, NamedSharding(new_mesh, spec))
     return jax.tree_util.tree_map(move, state, old_shardings)
+
+
+def detect_stragglers(
+    inflight: Mapping[int, Tuple[float, int]],
+    finished: Mapping[int, Tuple[float, int]],
+    *,
+    factor: float = 4.0,
+    min_s: float = 0.5,
+    min_finished: int = 2,
+) -> List[int]:
+    """Row-count-normalized straggler detection for phase-split fleets.
+
+    ``inflight``/``finished`` map host id → ``(elapsed_seconds, rows)``
+    where ``rows`` is the host's assigned row load from the partition
+    plan (`PartitionPlan.shard_rows`) — a host with a bigger shard gets
+    proportionally more time before being flagged, so uneven LPT splits
+    don't read as stragglers.  A host is flagged when its per-row rate
+    exceeds ``factor`` × the median finished per-row rate AND its raw
+    elapsed time exceeds ``min_s`` (tiny fits never flag).  Requires at
+    least ``min_finished`` finished hosts to establish the reference —
+    before that, nothing is flagged.  Each flag bumps the same
+    ``ft.straggler.flags`` counter `StragglerMonitor` uses.
+    """
+    refs = [dt / max(rows, 1) for dt, rows in finished.values()]
+    if len(refs) < min_finished or not inflight:
+        return []
+    med = statistics.median(refs)
+    out = []
+    for h, (dt, rows) in sorted(inflight.items()):
+        if dt > min_s and dt / max(rows, 1) > factor * max(med, 1e-12):
+            out.append(h)
+            obs.counter("ft.straggler.flags").add(1)
+    return out
 
 
 class StragglerMonitor:

@@ -41,6 +41,15 @@ it, e.g. ``span.serve.assign`` p99) and additionally a labeled
     library path (`assign_stream`/`assign_store`).
   * ``backend=<name>`` — engine events carry the resolved sweep
     backend as an event field (not a metric label).
+  * ``host=<id>`` — the fleet plane (`repro.fleet`, PR 9) labels its
+    spans ``fleet.local_fit`` / ``fleet.shard_fit`` /
+    ``fleet.exchange`` / ``fleet.objective`` with the host id (counters
+    stay process-global: in one REAL host process they are that host's
+    own series; the threaded sim fleet shares one registry, which its
+    tests account for).  Fleet counters: ``fleet.exchange.bytes{wire=…}``
+    (frame bytes by encoding), ``fleet.replan.moved_chunks``,
+    ``fleet.straggler.detected``, ``fleet.prefetch.bytes``,
+    ``fleet.tombstones``.
 
 This package is pure stdlib — no jax/numpy — so every layer may import
 it unconditionally without cycles or load cost.

@@ -1,0 +1,269 @@
+"""Cross-host correctness suite for `repro.fleet` (fast, in-process).
+
+Pins: the wire codec and its quantization bound, 1/2/4-simulated-host
+parity against the 1-shard in-memory fit (f32 AND bf16 exchange), the
+zero-coordination invariants (seeds, fingerprints), transport death
+semantics, prefetch, straggler eviction, and the degenerate
+`mesh_exchange`.  The multiprocess/kill article is
+`tests/test_fleet_elastic.py` (slow)."""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import BigFCMConfig, bigfcm_fit_store, driver_seeds
+from repro.core.outofcore import make_accumulator, ooc_accumulate
+from repro.data import ChunkStore, make_blobs
+from repro.data.plane import batched, plan_partitions, replan
+from repro.engine import Summary, resolve_backend
+from repro.fleet import (BF16_REL_BOUND, DirTransport, Evicted,
+                         FleetConfig, FleetHost, HostLost,
+                         MailboxTransport, decode_summary, encode_summary,
+                         fleet_fit, mesh_exchange)
+
+CFG = BigFCMConfig(n_clusters=5, use_driver=False, sample_size=512,
+                   seed=0, backend="jnp")
+
+
+@pytest.fixture(scope="module")
+def store():
+    x, _ = make_blobs(20000, 6, 5, seed=3)
+    return ChunkStore.ingest(x, chunk_rows=1024)
+
+
+@pytest.fixture(scope="module")
+def reference(store):
+    """The 1-shard in-memory fit + its GLOBAL objective through the
+    same backend the fleet uses (the objective must be apples-to-
+    apples: the calibrated default backend computes q in bf16)."""
+    res = bigfcm_fit_store(store, CFG, n_shards=1)
+    acc = make_accumulator(resolve_backend(CFG.backend), CFG.m)
+    _, _, q = ooc_accumulate(batched(store.iter_chunks(), 1024),
+                             res.centers, CFG.m, acc=acc)
+    return np.asarray(res.centers), float(q)
+
+
+# ------------------------------------------------------------------ wire ---
+
+def test_wire_roundtrip_f32_exact():
+    rng = np.random.default_rng(0)
+    s = Summary(rng.normal(size=(3, 5, 6)).astype(np.float32),
+                np.abs(rng.normal(size=(3, 5))).astype(np.float32))
+    out, fp = decode_summary(encode_summary(s, wire="f32",
+                                            fingerprint="deadbeef"))
+    assert fp == "deadbeef"
+    assert np.array_equal(out.centers, s.centers)
+    assert np.array_equal(out.masses, s.masses)
+
+
+def test_wire_bf16_error_bound_pinned():
+    """The quantized exchange's error bound, stated and enforced:
+    round-to-nearest into bf16's 8-bit significand is elementwise
+    |x̂ - x| ≤ 2⁻⁸·|x| — and the frame is about half the f32 bytes."""
+    rng = np.random.default_rng(1)
+    s = Summary(rng.normal(scale=100.0, size=(4, 5, 6))
+                .astype(np.float32),
+                np.abs(rng.normal(size=(4, 5))).astype(np.float32))
+    f32 = encode_summary(s, wire="f32")
+    bf16 = encode_summary(s, wire="bf16")
+    assert len(bf16) < 0.6 * len(f32)
+    out, _ = decode_summary(bf16)
+    assert BF16_REL_BOUND == 2.0 ** -8
+    assert np.all(np.abs(out.centers - s.centers)
+                  <= BF16_REL_BOUND * np.abs(s.centers) + 1e-30)
+    assert np.all(np.abs(out.masses - s.masses)
+                  <= BF16_REL_BOUND * np.abs(s.masses) + 1e-30)
+
+
+def test_wire_zero_slot_stack():
+    s = Summary(np.zeros((0, 5, 6), np.float32),
+                np.zeros((0, 5), np.float32))
+    out, _ = decode_summary(encode_summary(s))
+    assert out.centers.shape == (0, 5, 6)
+
+
+# ---------------------------------------------------------------- parity ---
+
+@pytest.mark.parametrize("n_hosts", [1, 2, 4])
+def test_fleet_parity_f32(store, reference, n_hosts):
+    """Fleet fit over 1/2/4 simulated hosts ≡ the 1-shard in-memory
+    fit within 1e-5 relative objective on separable data."""
+    _, q_ref = reference
+    res = fleet_fit(store, CFG, FleetConfig(n_hosts=n_hosts,
+                                            shards_per_host=2))
+    assert res.live == tuple(range(n_hosts))
+    assert res.n_rows == store.n_rows
+    assert abs(res.objective - q_ref) / q_ref < 1e-5
+
+
+def test_fleet_parity_quantized_exchange(store, reference):
+    """bf16-wire fleet: every exchanged sketch element is ≤2⁻⁸ off
+    (test above), and the merged objective stays within 1e-3 relative —
+    the quantization bound propagated through one WFCM merge round."""
+    _, q_ref = reference
+    res = fleet_fit(store, CFG, FleetConfig(n_hosts=4, shards_per_host=2,
+                                            wire="bf16"))
+    assert abs(res.objective - q_ref) / q_ref < 1e-3
+
+
+def test_fleet_centers_match_reference(store, reference):
+    c_ref, _ = reference
+    res = fleet_fit(store, CFG, FleetConfig(n_hosts=2))
+    a = c_ref[np.argsort(c_ref[:, 0])]
+    b = res.centers[np.argsort(res.centers[:, 0])]
+    np.testing.assert_allclose(a, b, atol=1e-3)
+
+
+def test_more_hosts_than_chunks(reference):
+    """A host that owns zero shards posts an empty stack and still
+    agrees with everyone — small stores don't wedge big fleets."""
+    x, _ = make_blobs(4000, 6, 5, seed=3)
+    small = ChunkStore.ingest(x, chunk_rows=2048)   # 2 chunks
+    res = fleet_fit(small, CFG, FleetConfig(n_hosts=3))
+    assert res.live == (0, 1, 2)
+    assert res.n_rows == 4000
+
+
+# ------------------------------------------------- zero-coordination ------
+
+def test_hosts_derive_identical_seeds_and_plans(store):
+    cfg = BigFCMConfig(n_clusters=4, sample_size=256, seed=7,
+                       backend="jnp")      # use_driver=True, Flag pinned
+    s1 = driver_seeds(store, cfg)
+    s2 = driver_seeds(store, cfg)
+    assert np.array_equal(s1, s2)
+    fleet = FleetConfig(n_hosts=3, shards_per_host=2)
+    tr = MailboxTransport()
+    hosts = [FleetHost(h, store, CFG, fleet, tr) for h in range(3)]
+    fps = {h.plan.fingerprint() for h in hosts}
+    assert len(fps) == 1
+    owned = sorted(s for h in hosts for s in h.my_shards())
+    assert owned == list(range(hosts[0].plan.n_shards))   # full cover
+
+
+def test_plan_divergence_fails_loud(store):
+    """Hosts partitioning differently (here: different shards_per_host)
+    must error at exchange via the fingerprint stamp — never merge."""
+    tr = MailboxTransport()
+    h0 = FleetHost(0, store, CFG, FleetConfig(n_hosts=2,
+                                              shards_per_host=1,
+                                              gather_timeout_s=10), tr)
+    h1 = FleetHost(1, store, CFG, FleetConfig(n_hosts=2,
+                                              shards_per_host=2,
+                                              gather_timeout_s=10), tr)
+    seeds = h0.seeds()
+    errs = {}
+
+    def go(h):
+        try:
+            h.exchange(h.local_fit(seeds))
+        except BaseException as e:        # noqa: BLE001
+            errs[h.host_id] = e
+
+    ts = [threading.Thread(target=go, args=(h,)) for h in (h0, h1)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert any(isinstance(e, RuntimeError)
+               and "fingerprint" in str(e) for e in errs.values())
+
+
+# -------------------------------------------------------------- transport --
+
+def test_dir_transport_tombstone_and_eviction(tmp_path):
+    tr = DirTransport(str(tmp_path), poll_s=0.01)
+    tr.post(0, 0, "sum", b"abc")
+    tr.mark_dead(1)
+    with pytest.raises(HostLost) as e:
+        tr.gather(0, 0, (0, 1), "sum", timeout_s=30.0)
+    assert e.value.lost == (1,)
+    with pytest.raises(Evicted):
+        tr.post(0, 1, "sum", b"xyz")       # the dead host's own post
+    # a complete gather still returns (and survives torn-frame checks)
+    assert tr.gather(0, 0, (0,), "sum", timeout_s=1.0) == {0: b"abc"}
+
+
+def test_dir_transport_timeout_backstop(tmp_path):
+    tr = DirTransport(str(tmp_path), poll_s=0.01)
+    tr.post(0, 0, "sum", b"abc")
+    t0 = time.monotonic()
+    with pytest.raises(HostLost) as e:
+        tr.gather(0, 0, (0, 1), "sum", timeout_s=0.2)
+    assert e.value.lost == (1,)
+    assert time.monotonic() - t0 < 5.0
+
+
+def test_mailbox_transport_gather_blocks_until_post():
+    tr = MailboxTransport()
+    tr.post(0, 0, "sum", b"a")
+    threading.Timer(0.1, lambda: tr.post(0, 1, "sum", b"b")).start()
+    out = tr.gather(0, 0, (0, 1), "sum", timeout_s=10.0)
+    assert out == {0: b"a", 1: b"b"}
+
+
+# ------------------------------------------------- prefetch + straggler ---
+
+def test_prefetch_on_off_identical(store, reference):
+    _, q_ref = reference
+    obs.reset_all()
+    on = fleet_fit(store, CFG, FleetConfig(n_hosts=2, shards_per_host=2))
+    assert obs.counter("fleet.prefetch.bytes").value > 0
+    off = fleet_fit(store, CFG, FleetConfig(n_hosts=2, shards_per_host=2,
+                                            prefetch=False))
+    assert np.array_equal(on.centers, off.centers)
+    # over-budget shards fall back to streaming, same result
+    tiny = fleet_fit(store, CFG, FleetConfig(n_hosts=2, shards_per_host=2,
+                                             prefetch_bytes=1024))
+    assert np.array_equal(on.centers, tiny.centers)
+    assert abs(on.objective - q_ref) / q_ref < 1e-5
+
+
+def test_straggler_evicted_and_replanned(store, reference):
+    """Speculative-execution semantics in the sim fleet: a host whose
+    per-row rate collapses is tombstoned mid-fit, survivors replan
+    (moved count = the deterministic replan's), and the fit converges
+    to the reference objective without it."""
+    _, q_ref = reference
+    obs.reset_all()
+    fleet = FleetConfig(n_hosts=3, shards_per_host=2,
+                        debug_delay_s={1: 6.0},
+                        straggler_factor=2.0, straggler_min_s=0.4)
+    res = fleet_fit(store, CFG, fleet)
+    assert res.live == (0, 2)
+    assert res.epoch == 1
+    assert obs.counter("fleet.straggler.detected").value == 1
+    plan0 = plan_partitions(store, 6)
+    _, moved = replan(store, plan0, 4)
+    assert res.moved_chunks == moved
+    # the obs counter is process-global: every simulated survivor adds
+    # its own (identical) moved count — per-process isolation is what
+    # the multiprocess suite pins
+    assert obs.counter("fleet.replan.moved_chunks").value == \
+        moved * len(res.live)
+    assert abs(res.objective - q_ref) / q_ref < 1e-5
+
+
+# ------------------------------------------------------------------ spmd ---
+
+def test_mesh_exchange_degenerate_single_device(store, reference):
+    """The shard_map exchange on this host's 1-device mesh: a 1-slot
+    stack merges to itself, quantized or not — the in-process pin of
+    the SPMD article (the forced-multi-device version runs in the slow
+    subprocess suite)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    c_ref, _ = reference
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    stacked = Summary(jnp.asarray(c_ref)[None],
+                      jnp.ones((1, c_ref.shape[0]), jnp.float32))
+    out = mesh_exchange(stacked, mesh)
+    np.testing.assert_allclose(np.asarray(out.centers), c_ref, atol=1e-6)
+    quant = mesh_exchange(stacked, mesh, wire_dtype=jnp.bfloat16)
+    assert np.all(np.abs(np.asarray(quant.centers) - c_ref)
+                  <= BF16_REL_BOUND * np.abs(c_ref) + 1e-30)

@@ -1,0 +1,149 @@
+"""Slow fleet acceptance: real processes, real kills, real collectives.
+
+Two subprocess-isolated articles of what `tests/test_fleet.py` pins
+in-process:
+
+  * kill-one-host — a 3-process fleet over a shared on-disk store; the
+    victim is SIGTERM'd mid-fit (it sleeps at fit start, so it dies
+    before posting), the parent's death-watch tombstones it, survivors
+    `replan` and converge to the same centers a fleet BORN at the
+    survivor size produces; the moved-chunk count matches both the
+    per-host result and the victim-free process's own obs counter.
+  * forced-multi-device `mesh_exchange` — the shard_map reduction over
+    a real 4-device all_gather (XLA_FLAGS must be set before jax
+    imports, hence the subprocess), f32 and bf16 wire.
+"""
+import subprocess
+import sys
+
+import pytest
+
+_ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+
+
+@pytest.mark.slow
+def test_kill_one_host_replans_and_converges():
+    code = r"""
+import os, tempfile, time
+import numpy as np
+from repro.core import BigFCMConfig
+from repro.data import ChunkStore, make_blobs
+from repro.data.plane import plan_partitions, replan
+from repro.fleet import FleetConfig, fleet_fit, spawn_fleet, watch_fleet, \
+    collect_results
+from repro.fleet.proc import MAIL_DIR
+
+root = tempfile.mkdtemp(prefix="fleet_kill_")
+store_dir = os.path.join(root, "store")
+fleet_dir = os.path.join(root, "run")
+os.makedirs(fleet_dir)
+x, _ = make_blobs(30000, 6, 5, seed=3)
+store = ChunkStore.ingest(x, chunk_rows=1024, cache_dir=store_dir)
+
+cfg_kw = dict(n_clusters=5, use_driver=False, sample_size=512, seed=0,
+              backend="jnp")
+# victim host 1 sleeps at fit start: killed strictly mid-fit, before
+# it posts anything.  Budgets are generous: three freshly-spawned jax
+# interpreters importing/compiling on this 1-core box can take several
+# minutes to first post, and the gather backstop must NEVER fire while
+# the parent death-watch is alive (tombstones are the authoritative
+# death signal) — a tight backstop here cascades into sole-survivor
+# split-brain, which is exactly the failure the budget guards against.
+fleet_kw = dict(shards_per_host=2, debug_delay_s={1: 4000.0},
+                gather_timeout_s=600.0)
+
+procs = spawn_fleet(3, store_dir, fleet_dir, cfg_kw, fleet_kw)
+try:
+    # wait until both survivors have posted their epoch-0 summaries
+    # (they are blocked in the gather on the sleeping victim), then
+    # kill it
+    mail = os.path.join(fleet_dir, MAIL_DIR)
+    deadline = time.monotonic() + 900
+    while not (os.path.exists(os.path.join(mail, "e0000.sum.h0000.bin"))
+               and os.path.exists(os.path.join(mail,
+                                               "e0000.sum.h0002.bin"))):
+        assert time.monotonic() < deadline, "survivors never posted"
+        time.sleep(0.2)
+    procs[1].terminate()
+    watch_fleet(procs, fleet_dir, timeout_s=600)
+finally:
+    # never leak orphan hosts — they would keep running the protocol
+    # (and chewing this 1-core box) long after a failed assert
+    for p in procs.values():
+        if p.is_alive():
+            p.terminate()
+
+results = collect_results(fleet_dir, 3)
+assert sorted(results) == [0, 2], sorted(results)
+r0, r2 = results[0], results[2]
+
+# elastic bookkeeping: one loss event, survivors replanned 6 -> 4
+assert list(r0["live"]) == [0, 2]
+assert int(r0["epoch"]) == 1
+plan0 = plan_partitions(store, 6)
+_, moved = replan(store, plan0, 4)
+assert int(r0["moved_chunks"]) == moved, (int(r0["moved_chunks"]), moved)
+# ...and each surviving PROCESS's own obs counter saw exactly that many
+assert int(r0["obs_moved"]) == moved
+assert int(r2["obs_moved"]) == moved
+
+# survivors agree bit-for-bit with each other
+assert np.array_equal(r0["centers"], r2["centers"])
+assert float(r0["objective"]) == float(r2["objective"])
+assert int(r0["n_rows"]) == 30000
+
+# ...and converge to what a fleet born at the survivor size computes:
+# replan(6 -> 4) IS plan_partitions(store, 4), and survivor ranks map
+# to the same shard sets, so this is the strong form of "converges to
+# the same centers within tolerance"
+born2 = fleet_fit(store, BigFCMConfig(**cfg_kw),
+                  FleetConfig(n_hosts=2, shards_per_host=2))
+np.testing.assert_allclose(r0["centers"], born2.centers, atol=1e-5)
+rel = abs(float(r0["objective"]) - born2.objective) / born2.objective
+assert rel < 1e-5, rel
+print("FLEET_ELASTIC_OK")
+"""
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=1800, env=_ENV)
+    assert "FLEET_ELASTIC_OK" in res.stdout, (res.stdout[-1500:],
+                                              res.stderr[-2500:])
+
+
+@pytest.mark.slow
+def test_mesh_exchange_forced_four_devices():
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.engine import MergePlan, Summary, merge_summaries
+from repro.fleet import BF16_REL_BOUND, mesh_exchange
+
+rng = np.random.default_rng(0)
+H, C, d = 4, 5, 6
+centers = rng.normal(scale=5.0, size=(H, C, d)).astype(np.float32)
+masses = np.abs(rng.normal(size=(H, C))).astype(np.float32) + 0.5
+stacked = Summary(jnp.asarray(centers), jnp.asarray(masses))
+
+mesh = Mesh(np.asarray(jax.devices()).reshape(4), ("data",))
+out = mesh_exchange(stacked, mesh, backend="jnp")
+# the collective reduction must equal the host-side pairwise merge of
+# the same stack — the exact reduction every FleetHost runs locally
+ref = merge_summaries(stacked, MergePlan("pairwise"), backend="jnp")
+np.testing.assert_allclose(np.asarray(out.centers),
+                           np.asarray(ref.summary.centers), atol=1e-5)
+
+# quantized wire: merged centers stay within a small multiple of the
+# per-element bf16 bound (one quantization, then a contractive WFCM)
+outq = mesh_exchange(stacked, mesh, backend="jnp",
+                     wire_dtype=jnp.bfloat16)
+err = np.max(np.abs(np.asarray(outq.centers)
+                    - np.asarray(ref.summary.centers)))
+scale = np.max(np.abs(np.asarray(ref.summary.centers)))
+assert err <= 16 * BF16_REL_BOUND * scale, (err, scale)
+print("FLEET_SPMD_OK")
+"""
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900, env=_ENV)
+    assert "FLEET_SPMD_OK" in res.stdout, (res.stdout[-1500:],
+                                           res.stderr[-2500:])

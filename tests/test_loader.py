@@ -237,3 +237,60 @@ def test_reshard_mid_epoch_keeps_row_counts_exact():
     assert not loader.resident                  # cache dropped on reshard
     # next epoch re-places everything on the new mesh, same totals
     assert sum(float(w.sum()) for _, w in loader) == 500.0
+
+
+def test_poisoned_source_during_reshard_raises_in_consumer():
+    """Regression (fleet PR): a source that raises while a `reshard()`
+    lands mid-epoch — exactly what an elastic watcher thread does to a
+    live loader — must still fail loud in the consumer instead of
+    hanging it.  Covers both orders: reshard-then-poison and a reshard
+    issued from another thread while the producer is failing."""
+    import jax
+    from jax.sharding import Mesh
+
+    def poisoned():
+        yield np.ones((64, 3), np.float32)
+        yield np.ones((64, 3), np.float32)
+        raise RuntimeError("upstream parse failure")
+
+    mesh_a = Mesh(np.array(jax.devices()[:1]), ("data",))
+    mesh_b = Mesh(np.array(jax.devices()[:1]), ("data",))
+
+    # same-thread: reshard between batches, then hit the poison
+    loader = ShardedLoader(poisoned(), batch_rows=32, mesh=mesh_a)
+    it = iter(loader)
+    next(it)
+    loader.reshard(mesh_b, ("data",))
+    with pytest.raises(RuntimeError, match="upstream parse failure"):
+        list(it)
+
+    # watcher-thread: reshard fired concurrently with the failure
+    import threading
+    loader = ShardedLoader(poisoned(), batch_rows=32, mesh=mesh_a,
+                           prefetch=1)
+    it = iter(loader)
+    next(it)
+    t = threading.Thread(
+        target=lambda: loader.reshard(mesh_b, ("data",)))
+    t.start()
+    with pytest.raises(RuntimeError, match="upstream parse failure"):
+        list(it)
+    t.join()
+
+
+def test_dead_producer_fails_loud_not_hung():
+    """A producer thread that dies without forwarding ANYTHING (no eos,
+    no error item — the pathological failure the queue protocol can't
+    see) must surface as a RuntimeError in the consumer within the
+    liveness-check window, never as an eternal q.get() hang."""
+    class BrokenPump(ShardedLoader):
+        def _pump(self, chunk_iter, q, writer, apply_transform, stop):
+            q.put(("batch", (np.ones((4, 3), np.float32),
+                             np.ones((4,), np.float32))))
+            # thread exits here: no eos, no error — silent death
+
+    loader = BrokenPump(iter([np.ones((8, 3), np.float32)]), batch_rows=4)
+    it = iter(loader)
+    next(it)                                   # the one forwarded batch
+    with pytest.raises(RuntimeError, match="producer thread died"):
+        next(it)

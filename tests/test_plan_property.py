@@ -1,0 +1,100 @@
+"""Property suite: `PartitionPlan` is a pure function of
+(chunking, n_shards) — the zero-coordination invariant `repro.fleet`
+stands on.  N independently-constructed "hosts" (fresh `ChunkStore`
+objects over the same chunking, with DIFFERENT data bytes — the plan
+may only read the chunking) must agree bit-for-bit on the full
+chunk→shard map, across uneven chunk sizes, replans, and grown stores.
+
+Runs under the hypothesis-free `seeded_cases` fallback (hypothesis is
+not installed in this container)."""
+import numpy as np
+
+from conftest import seeded_cases
+from repro.data.cache import ChunkStore
+from repro.data.plane import plan_partitions, replan
+
+N_HOSTS = 4     # independently-planning "hosts" per case
+
+
+def _store(rng, rows, dim=3, fill=0.0):
+    """An in-memory store with the given (possibly uneven) chunk rows.
+    ``fill`` varies the data bytes so agreement can only come from the
+    chunking, never from content."""
+    chunks = [np.full((r, dim), fill, np.float32) for r in rows]
+    return ChunkStore(chunk_rows=max(rows), dim=dim, rows=list(rows),
+                      content_hash=f"test:{fill}", chunks=chunks)
+
+
+def _case(rng):
+    n_chunks = int(rng.integers(1, 40))
+    # uneven chunks: mix of full-size and ragged (incl. size-1) chunks
+    rows = [int(rng.integers(1, 5000)) for _ in range(n_chunks)]
+    n_shards = int(rng.integers(1, 12))
+    grow_by = [int(rng.integers(1, 5000))
+               for _ in range(int(rng.integers(1, 8)))]
+    return rows, n_shards, grow_by
+
+
+@seeded_cases(_case, n=25)
+def test_plan_pure_function_of_chunking(case):
+    rows, n_shards, _ = case
+    plans = [plan_partitions(_store(np.random.default_rng(h), rows,
+                                    fill=float(h)), n_shards)
+             for h in range(N_HOSTS)]
+    first = plans[0]
+    for p in plans[1:]:
+        assert p.assignment == first.assignment      # bit-for-bit map
+        assert p.shard_rows == first.shard_rows
+        assert p.fingerprint() == first.fingerprint()
+    # every chunk placed, totals conserved
+    assert len(first.assignment) == len(rows)
+    assert first.n_rows == sum(rows)
+    assert all(0 <= s < n_shards for s in first.assignment)
+
+
+@seeded_cases(_case, n=25)
+def test_replan_deterministic_and_consistent(case):
+    rows, n_shards, _ = case
+    new_shards = max(1, n_shards - 1)        # the kill-one-host shape
+    outcomes = []
+    for h in range(N_HOSTS):
+        store = _store(np.random.default_rng(h), rows, fill=float(h))
+        plan = plan_partitions(store, n_shards)
+        outcomes.append(replan(store, plan, new_shards))
+    (first, moved0) = outcomes[0]
+    for (p, moved) in outcomes[1:]:
+        assert p.assignment == first.assignment
+        assert moved == moved0               # identical migration count
+    # replan ≡ planning fresh at the new count (path independence —
+    # survivors that saw deaths in different groupings still converge)
+    fresh = plan_partitions(_store(np.random.default_rng(99), rows),
+                            new_shards)
+    assert first.assignment == fresh.assignment
+
+
+@seeded_cases(_case, n=25)
+def test_grown_store_plans_agree(case):
+    rows, n_shards, grow_by = case
+    grown = list(rows) + grow_by
+    plans = [plan_partitions(_store(np.random.default_rng(h), grown,
+                                    fill=float(h)), n_shards)
+             for h in range(N_HOSTS)]
+    for p in plans[1:]:
+        assert p.assignment == plans[0].assignment
+        assert p.fingerprint() == plans[0].fingerprint()
+    # growth changed the chunking, so the fingerprint must change too
+    base = plan_partitions(_store(np.random.default_rng(0), rows),
+                           n_shards)
+    assert base.fingerprint() != plans[0].fingerprint()
+
+
+@seeded_cases(_case, n=25)
+def test_lpt_balance_bound(case):
+    """Greedy LPT's classical guarantee, pinned as a property: the
+    heaviest shard carries at most (ideal + the largest chunk) rows —
+    what makes per-shard row counts a sane straggler normalizer."""
+    rows, n_shards, _ = case
+    plan = plan_partitions(_store(np.random.default_rng(0), rows),
+                           n_shards)
+    ideal = sum(rows) / n_shards
+    assert max(plan.shard_rows) <= ideal + max(rows)
