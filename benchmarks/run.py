@@ -12,7 +12,7 @@ import time
 TABLES = ["t2_driver_epsilon", "t3_epsilon_methods", "t4_datasize",
           "t5_clusters", "t6_datasets", "t7_accuracy", "t8_silhouette",
           "t9_kernel", "t10_stream", "t11_engine", "t12_cache",
-          "t13_roofline"]
+          "t13_roofline", "t16_tenant"]
 
 
 def main() -> None:

@@ -29,6 +29,13 @@
 #                              # store must converge with survivors
 #                              # bit-identical (the kill-one-host
 #                              # article is the `slow` marked suite)
+#   scripts/verify.sh tenant   # tenant-plane tests + a seconds-scale
+#                              # smoke: fit a 64-tenant cohort batched
+#                              # and looped, assert per-tenant objective
+#                              # parity, ONE launch (tenant.fit.launches
+#                              # counter) and ONE compiled program
+#                              # (engine.batched_trace_counts) for the
+#                              # batched path vs 64 looped dispatches
 #
 # Every mode prints the 10 slowest test durations (--durations=10) so
 # the ~27-minute tier-1 budget stays visible as the suite grows.
@@ -155,6 +162,42 @@ if __name__ == "__main__":
 EOF
          python "$smoke"
          rm -f "$smoke" ;;
-  *) echo "usage: scripts/verify.sh [fast|full|stream|cache|perf|obs|serve|fleet] [pytest args...]" >&2
+  tenant) python -m pytest -x -q --durations=10 -m "not slow" \
+            tests/test_tenant.py "$@"
+          # smoke: 64 small tenants, batched vs looped — same answers,
+          # 1 launch + 1 compiled program instead of 64 dispatches
+          python - <<'EOF'
+import numpy as np
+from repro import obs
+from repro.engine import batched_trace_counts
+from repro.tenant import TenantFitConfig, fit_tenants, fit_tenants_looped
+
+rng = np.random.default_rng(0)
+data = {f"u{i}": (rng.normal(size=(int(rng.integers(8, 60)), 3))
+                  + 3.0 * (i % 4)).astype(np.float32) for i in range(64)}
+cfg = TenantFitConfig(n_clusters=3, seed=7, backend="jnp")
+before = set(batched_trace_counts())
+
+def launches():
+    return obs.metrics_snapshot()["counters"].get("tenant.fit.launches", 0.0)
+
+base = launches()
+b = fit_tenants(data, cfg)
+n_batched = launches() - base
+l = fit_tenants_looped(data, cfg)
+n_looped = launches() - base - n_batched
+
+rel = np.abs(b.objective - l.objective) / np.maximum(np.abs(l.objective),
+                                                     1e-12)
+assert rel.max() <= 1e-5, f"parity broke: max rel objective {rel.max()}"
+assert n_batched == 1, f"batched fit took {n_batched} launches, want 1"
+assert n_looped == 64, f"looped fit took {n_looped} launches, want 64"
+new = {k: v for k, v in batched_trace_counts().items() if k not in before}
+assert len(new) == 1 and all(v == 1 for v in new.values()), new
+print(f"tenant smoke OK: 64 tenants, batched parity {rel.max():.2e}, "
+      f"1 launch / 1 program vs {int(n_looped)} looped dispatches")
+EOF
+          ;;
+  *) echo "usage: scripts/verify.sh [fast|full|stream|cache|perf|obs|serve|fleet|tenant] [pytest args...]" >&2
      exit 2 ;;
 esac

@@ -1,4 +1,5 @@
-from .fcm import (FCMResult, fcm, wfcm, fcm_sweep, membership_terms,
+from .fcm import (FCMResult, fcm, wfcm, fcm_batched, fcm_sweep,
+                  membership_terms,
                   pairwise_sqdist, soft_assign, hard_assign)
 from .outofcore import make_accumulator, ooc_accumulate, ooc_fcm, ooc_sweep
 from .wfcmpb import wfcmpb, wfcmpb_batches, wfcmpb_store
@@ -7,7 +8,8 @@ from .bigfcm import (BigFCMConfig, BigFCMResult, bigfcm_fit,
 from .sampling import parker_hall_sample_size, thompson_sample_size
 
 __all__ = [
-    "FCMResult", "fcm", "wfcm", "fcm_sweep", "membership_terms",
+    "FCMResult", "fcm", "wfcm", "fcm_batched", "fcm_sweep",
+    "membership_terms",
     "pairwise_sqdist", "soft_assign", "hard_assign",
     "make_accumulator", "ooc_accumulate", "ooc_fcm", "ooc_sweep",
     "wfcmpb", "wfcmpb_batches", "wfcmpb_store",

@@ -20,14 +20,16 @@ import functools
 from typing import NamedTuple, Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.engine.backend import (_D2_FLOOR, BackendLike, fcm_sweep,
                                   hard_assign, membership_terms,
                                   pairwise_sqdist, soft_assign)
-from repro.engine.merge import fcm_converge
+from repro.engine.merge import fcm_converge, fcm_converge_batched
 
 __all__ = [
-    "FCMResult", "fcm", "wfcm", "fcm_sweep", "membership_terms",
+    "FCMResult", "fcm", "wfcm", "fcm_batched", "fcm_sweep",
+    "membership_terms",
     "pairwise_sqdist", "soft_assign", "hard_assign", "_D2_FLOOR",
 ]
 
@@ -63,3 +65,32 @@ def fcm(
 
 
 wfcm = functools.partial(fcm)  # WFCM == FCM with point_weights (paper Eq. 2)
+
+
+def fcm_batched(
+    x: jax.Array,
+    init_centers: jax.Array,
+    *,
+    m=2.0,
+    eps: float = 1e-6,
+    max_iter: int = 1000,
+    point_weights: Optional[jax.Array] = None,
+    backend: BackendLike = None,
+) -> FCMResult:
+    """T independent (weighted) FCM fits in ONE compiled program.
+
+    ``x`` is a tenant-stacked (T, N, d) block (ragged per-tenant row
+    counts ride in as zero-weight phantom padding via
+    ``point_weights``), ``init_centers`` (T, C, d), ``m`` a scalar or a
+    (T,) per-tenant array.  Every leaf of the returned `FCMResult`
+    carries the leading T axis; each tenant's trajectory matches its
+    own `fcm` run (per-tenant done-mask inside the shared while_loop —
+    see `repro.engine.merge.fcm_converge_batched`).  `repro.tenant`
+    packs/seeds/routes around this entry."""
+    x = jnp.asarray(x, jnp.float32)
+    w = (jnp.ones(x.shape[:2], jnp.float32) if point_weights is None
+         else jnp.asarray(point_weights, jnp.float32))
+    v, masses, q, n_iter = fcm_converge_batched(
+        x, w, init_centers, m=m, eps=eps, max_iter=max_iter,
+        backend=backend)
+    return FCMResult(v, masses, n_iter, q)

@@ -1,9 +1,9 @@
 from .synth import (make_blobs, make_susy_like, make_higgs_like,
                     make_kdd_like, make_moving_blobs, iris, pima_like)
-from .cache import CacheInvalid, ChunkStore, StoreWriter
+from .cache import CacheInvalid, ChunkStore, ColumnStats, StoreWriter
 from .plane import (PartitionPlan, as_store, batched, bucket_for,
-                    pad_rows, plan_partitions, replan, shape_buckets,
-                    shard_batches)
+                    geom_bucket, pad_rows, plan_partitions, replan,
+                    shape_buckets, shard_batches)
 from .loader import ShardedLoader, parse_records, normalize
 from .stream import (iterator_source, out_of_order_source, replay_source,
                      socket_sim_source, stamp_source, stream_loader)
@@ -11,10 +11,10 @@ from .lm import synthetic_token_batches
 
 __all__ = ["make_blobs", "make_susy_like", "make_higgs_like",
            "make_kdd_like", "make_moving_blobs", "iris", "pima_like",
-           "CacheInvalid", "ChunkStore", "StoreWriter",
+           "CacheInvalid", "ChunkStore", "ColumnStats", "StoreWriter",
            "PartitionPlan", "as_store", "batched", "bucket_for",
-           "pad_rows", "plan_partitions", "replan", "shape_buckets",
-           "shard_batches",
+           "geom_bucket", "pad_rows", "plan_partitions", "replan",
+           "shape_buckets", "shard_batches",
            "ShardedLoader", "parse_records", "normalize",
            "iterator_source", "out_of_order_source", "replay_source",
            "socket_sim_source", "stamp_source", "stream_loader",

@@ -36,7 +36,8 @@ import glob
 import hashlib
 import json
 import os
-from typing import Callable, Iterator, Iterable, List, Optional, Sequence, Union
+from typing import (Callable, Iterator, Iterable, List, NamedTuple,
+                    Optional, Sequence, Union)
 
 import numpy as np
 
@@ -49,6 +50,23 @@ _CHUNK_FMT = "chunk_{:06d}.npy"
 
 class CacheInvalid(ValueError):
     """The cache directory has no valid manifest / mismatched chunks."""
+
+
+class ColumnStats(NamedTuple):
+    """Per-column dataset statistics, accumulated in ONE pass at ingest
+    (the same pass that parses and chunks — BigFCM's cache-once rule
+    applies to statistics too: no extra scan, ever).  Variance is the
+    population variance, derived from the float64 (Σx, Σx²) sums the
+    writer keeps; all arrays are (dim,)."""
+    count: int
+    minimum: np.ndarray
+    maximum: np.ndarray
+    mean: np.ndarray
+    var: np.ndarray
+
+    @property
+    def std(self) -> np.ndarray:
+        return np.sqrt(self.var)
 
 
 class Rechunker:
@@ -113,6 +131,12 @@ class StoreWriter:
         self._dim: Optional[int] = None
         self._hash = hashlib.sha256()
         self._finished = False
+        # one-pass column stats accumulators (float64; see ColumnStats)
+        self._stat_count = 0
+        self._stat_min: Optional[np.ndarray] = None
+        self._stat_max: Optional[np.ndarray] = None
+        self._stat_sum: Optional[np.ndarray] = None
+        self._stat_sumsq: Optional[np.ndarray] = None
         if cache_dir is not None:
             os.makedirs(cache_dir, exist_ok=True)
             # Invalidate any previous cache FIRST (manifest gone ⇒ dir
@@ -138,6 +162,20 @@ class StoreWriter:
     def _emit(self, arr: np.ndarray) -> None:
         arr = np.ascontiguousarray(arr, np.float32)
         self._hash.update(arr.tobytes())
+        a64 = arr.astype(np.float64)
+        self._stat_count += int(arr.shape[0])
+        if self._stat_min is None:
+            self._stat_min = a64.min(axis=0)
+            self._stat_max = a64.max(axis=0)
+            self._stat_sum = a64.sum(axis=0)
+            self._stat_sumsq = (a64 * a64).sum(axis=0)
+        else:
+            np.minimum(self._stat_min, a64.min(axis=0),
+                       out=self._stat_min)
+            np.maximum(self._stat_max, a64.max(axis=0),
+                       out=self._stat_max)
+            self._stat_sum += a64.sum(axis=0)
+            self._stat_sumsq += (a64 * a64).sum(axis=0)
         i = len(self._rows)
         self._rows.append(int(arr.shape[0]))
         obs.counter("data.cache.chunks_written").add(1)
@@ -164,11 +202,20 @@ class StoreWriter:
         if self._dim is None:
             raise ValueError("cannot build a ChunkStore from an empty source")
         content_hash = "sha256:" + self._hash.hexdigest()
+        col_stats = {"count": self._stat_count,
+                     "min": self._stat_min.tolist(),
+                     "max": self._stat_max.tolist(),
+                     "sum": self._stat_sum.tolist(),
+                     "sumsq": self._stat_sumsq.tolist()}
         if self.cache_dir is not None:
+            # "col_stats" is an ADDITIVE manifest key: caches written
+            # before it existed still open (stats() just returns None),
+            # so FORMAT_VERSION stays put.
             manifest = {"format_version": FORMAT_VERSION,
                         "chunk_rows": self.chunk_rows, "dim": self._dim,
                         "rows": self._rows, "dtype": "float32",
-                        "content_hash": content_hash}
+                        "content_hash": content_hash,
+                        "col_stats": col_stats}
             tmp = os.path.join(self.cache_dir, MANIFEST_NAME + ".tmp")
             with open(tmp, "w") as f:
                 json.dump(manifest, f)
@@ -176,7 +223,8 @@ class StoreWriter:
         return ChunkStore(chunk_rows=self.chunk_rows, dim=self._dim,
                           rows=self._rows, content_hash=content_hash,
                           cache_dir=self.cache_dir,
-                          chunks=None if self.cache_dir else self._chunks)
+                          chunks=None if self.cache_dir else self._chunks,
+                          col_stats=col_stats)
 
 
 class ChunkStore:
@@ -190,7 +238,9 @@ class ChunkStore:
 
     def __init__(self, *, chunk_rows: int, dim: int, rows: Sequence[int],
                  content_hash: str, cache_dir: Optional[str] = None,
-                 chunks: Optional[List[np.ndarray]] = None):
+                 chunks: Optional[List[np.ndarray]] = None,
+                 col_stats: Optional[dict] = None):
+        self._col_stats = col_stats
         self.chunk_rows = int(chunk_rows)
         self.dim = int(dim)
         self.rows = tuple(int(r) for r in rows)
@@ -239,7 +289,7 @@ class ChunkStore:
                                f" != {FORMAT_VERSION}")
         store = cls(chunk_rows=man["chunk_rows"], dim=man["dim"],
                     rows=man["rows"], content_hash=man["content_hash"],
-                    cache_dir=cache_dir)
+                    cache_dir=cache_dir, col_stats=man.get("col_stats"))
         for i, r in enumerate(store.rows):
             p = os.path.join(cache_dir, _CHUNK_FMT.format(i))
             try:
@@ -330,6 +380,53 @@ class ChunkStore:
             sel = cid == c
             out[sel] = self.chunk(int(c))[idx[sel] - self.offsets[c]]
         return out
+
+    def stats(self) -> Optional[ColumnStats]:
+        """Per-column stats from the ingest pass — no data scan here;
+        the accumulators ride the manifest (or the in-memory writer).
+        ``None`` for caches written before stats existed (re-ingest to
+        get them)."""
+        s = self._col_stats
+        if s is None:
+            return None
+        n = int(s["count"])
+        mean = np.asarray(s["sum"], np.float64) / n
+        var = np.maximum(
+            np.asarray(s["sumsq"], np.float64) / n - mean * mean, 0.0)
+        return ColumnStats(n, np.asarray(s["min"], np.float64),
+                           np.asarray(s["max"], np.float64), mean, var)
+
+    def normalizer(self, kind: str = "standard"
+                   ) -> Callable[[np.ndarray], np.ndarray]:
+        """A column-normalize transform FIT on this store's ingest-pass
+        stats: ``"standard"`` maps to zero mean / unit variance,
+        ``"minmax"`` to [0, 1].  Constant columns pass through
+        unchanged (scale floors at 1).  Hand the callable to
+        ``ChunkStore.ingest(..., transform=...)`` — normalize once at
+        ingest with the TRAINING store's statistics, serve forever off
+        the cache."""
+        st = self.stats()
+        if st is None:
+            raise CacheInvalid(
+                f"store at {self.cache_dir!r} predates column stats; "
+                "re-ingest to enable normalizer()")
+        if kind == "standard":
+            shift = st.mean
+            scale = np.where(st.std > 0, st.std, 1.0)
+        elif kind == "minmax":
+            shift = st.minimum
+            span = st.maximum - st.minimum
+            scale = np.where(span > 0, span, 1.0)
+        else:
+            raise ValueError(f"unknown normalizer kind {kind!r}; "
+                             "one of 'standard', 'minmax'")
+        shift32 = shift.astype(np.float32)
+        inv32 = (1.0 / scale).astype(np.float32)
+
+        def transform(x: np.ndarray) -> np.ndarray:
+            return (np.asarray(x, np.float32) - shift32) * inv32
+
+        return transform
 
     def verify(self) -> bool:
         """Re-hash the chunk bytes against the manifest's content hash."""

@@ -149,6 +149,23 @@ def shape_buckets(max_rows: int, *, base: int = 64,
     return tuple(out)
 
 
+def geom_bucket(n: int, *, base: int = 64, factor: int = 2) -> int:
+    """Smallest ``base·factor^k ≥ n`` — the open-ended bucket ladder.
+
+    `shape_buckets`/`bucket_for` serve consumers with a known ceiling
+    (a service's ``max_batch_rows``); this is the same geometric rule
+    for axes with no ceiling — the tenant plane's row and tenant-count
+    buckets, where padding up to the bucket keeps XLA at one compiled
+    program per bucket however the per-fit sizes wobble."""
+    if n <= 0 or base <= 0 or factor < 2:
+        raise ValueError(f"bad geometric bucket n={n} base={base} "
+                         f"factor={factor}")
+    b = base
+    while b < n:
+        b *= factor
+    return b
+
+
 def bucket_for(n: int, buckets: Tuple[int, ...]) -> int:
     """Smallest bucket ≥ ``n`` (``buckets`` ascending)."""
     for b in buckets:

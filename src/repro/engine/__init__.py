@@ -19,22 +19,25 @@ thin consumers of this module.
 """
 from .backend import (Bf16Backend, JnpBackend, SweepBackend,
                       available_backends, default_backend_name,
-                      fcm_accumulate, fcm_accumulate_mixed, fcm_sweep,
+                      fcm_accumulate, fcm_accumulate_batched,
+                      fcm_accumulate_mixed, fcm_sweep,
                       get_backend, hard_assign, membership_terms,
                       normalize_accumulators, pairwise_sqdist,
                       register_backend, resolve_backend, soft_assign)
-from .merge import (TOPOLOGIES, MergePlan, MergeResult, fcm_converge,
-                    merge_summaries)
+from .merge import (TOPOLOGIES, MergePlan, MergeResult,
+                    batched_trace_counts, fcm_converge,
+                    fcm_converge_batched, merge_summaries)
 from .summary import (Summary, concat, phantom, slot_masses, stack,
                       summary, total_mass)
 
 __all__ = [
     "Bf16Backend", "JnpBackend", "SweepBackend", "available_backends",
-    "default_backend_name", "fcm_accumulate", "fcm_accumulate_mixed",
-    "fcm_sweep", "get_backend",
+    "default_backend_name", "fcm_accumulate", "fcm_accumulate_batched",
+    "fcm_accumulate_mixed", "fcm_sweep", "get_backend",
     "hard_assign", "membership_terms", "normalize_accumulators",
     "pairwise_sqdist", "register_backend", "resolve_backend",
     "soft_assign", "TOPOLOGIES", "MergePlan", "MergeResult",
-    "fcm_converge", "merge_summaries", "Summary", "concat", "phantom",
+    "batched_trace_counts", "fcm_converge", "fcm_converge_batched",
+    "merge_summaries", "Summary", "concat", "phantom",
     "slot_masses", "stack", "summary", "total_mass",
 ]

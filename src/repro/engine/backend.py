@@ -109,8 +109,11 @@ def fcm_accumulate(x, weights, centers, m):
 
 
 def normalize_accumulators(v_num, w_i, q):
-    """The one deferred normalization: (v_num, w_i, q) → (v_new, w_i, q)."""
-    return v_num / jnp.maximum(w_i, _D2_FLOOR)[:, None], w_i, q
+    """The one deferred normalization: (v_num, w_i, q) → (v_new, w_i, q).
+
+    Shape-polymorphic over leading axes: works for a single (C, d)/(C,)
+    accumulator pair and for tenant-stacked (T, C, d)/(T, C) ones."""
+    return v_num / jnp.maximum(w_i, _D2_FLOOR)[..., None], w_i, q
 
 
 def fcm_sweep(x, weights, centers, m):
@@ -153,6 +156,27 @@ def fcm_accumulate_mixed(x, weights, centers, m,
     return v_num, w_i, q
 
 
+def _batched_in_axes(m) -> Union[int, None]:
+    """vmap axis for ``m``: a scalar broadcasts to every tenant, a (T,)
+    array gives each tenant its own fuzzifier (the per-tenant config
+    axis)."""
+    return 0 if jnp.ndim(m) else None
+
+
+def fcm_accumulate_batched(x, weights, centers, m):
+    """Alg.-1 accumulators vmapped over a leading tenant axis.
+
+    ``x`` (T, N, d), ``weights`` (T, N), ``centers`` (T, C, d), ``m``
+    scalar or (T,) → per-tenant (v_num (T, C, d), w_i (T, C), q (T,)).
+    The N axis is a shared shape bucket: per-tenant row counts n_t ≤ N
+    ride in as zero-weight phantom padding (`data.plane.pad_rows`), so
+    padding is a no-op in every accumulator — T small models cost ONE
+    launch instead of T."""
+    return jax.vmap(fcm_accumulate,
+                    in_axes=(0, 0, 0, _batched_in_axes(m)))(
+        x, weights, centers, m)
+
+
 def soft_assign(x: jax.Array, centers: jax.Array, m: float = 2.0) -> jax.Array:
     """Membership degrees u_ik (not raised to m) — for evaluation/serving.
 
@@ -188,6 +212,24 @@ class SweepBackend:
     def sweep(self, x, w, centers, m):
         """(v_new, w_i, q): accumulate + the one deferred normalization."""
         return normalize_accumulators(*self.accumulate(x, w, centers, m))
+
+    def batched_accumulate(self, x, w, centers, m):
+        """Raw accumulators for a TENANT-STACKED batch — the multi-model
+        entry (PR 10): ``x`` (T, N, d), ``w`` (T, N), ``centers``
+        (T, C, d), ``m`` scalar or (T,) → per-tenant (v_num, w_i, q)
+        with leading T.  Default: `jax.vmap` of ``accumulate`` — one
+        fused launch for all T models; backends whose kernels can't be
+        vmapped override this."""
+        return jax.vmap(self.accumulate,
+                        in_axes=(0, 0, 0, _batched_in_axes(m)))(
+            x, w, centers, m)
+
+    def batched_sweep(self, x, w, centers, m):
+        """Tenant-stacked sweep: batched accumulate + the per-tenant
+        deferred normalization (shape-polymorphic
+        `normalize_accumulators`)."""
+        return normalize_accumulators(*self.batched_accumulate(
+            x, w, centers, m))
 
     def soft_assign(self, x, centers, m=2.0):
         return soft_assign(x, centers, m)

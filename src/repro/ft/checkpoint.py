@@ -129,14 +129,18 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore_arrays(self, step: Optional[int] = None) -> dict:
+    def restore_arrays(self, step: Optional[int] = None,
+                       keys: Optional[Any] = None) -> dict:
         """Template-free restore: every leaf as a host numpy array keyed
         by its flattened path, shapes/dtypes read straight off the
         manifest.  This is the self-describing path for consumers that
         cannot know shapes ahead of time — a scorer replica following a
         streaming learner whose center count grows and shrinks
         (birth/death) boots from whatever the manifest says, no
-        template pytree required."""
+        template pytree required.  ``keys`` restricts loading to the
+        listed leaf paths (missing ones are simply absent from the
+        result) — the tenant plane pulls its six stacked leaves out of a
+        manifest that may also hold unrelated training state."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
@@ -144,6 +148,10 @@ class CheckpointManager:
             d = os.path.join(self.dir, f"step_{step:010d}")
             with open(os.path.join(d, "manifest.json")) as f:
                 manifest = json.load(f)["leaves"]
+            if keys is not None:
+                want = set(keys)
+                manifest = {k: v for k, v in manifest.items()
+                            if k in want}
             out = {key: np.load(os.path.join(d, spec["file"]))
                    for key, spec in manifest.items()}
         obs.counter("ft.checkpoint.restores").add(1)

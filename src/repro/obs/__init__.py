@@ -50,6 +50,17 @@ it, e.g. ``span.serve.assign`` p99) and additionally a labeled
     (frame bytes by encoding), ``fleet.replan.moved_chunks``,
     ``fleet.straggler.detected``, ``fleet.prefetch.bytes``,
     ``fleet.tombstones``.
+  * ``tenants=<T>`` — the tenant plane (`repro.tenant` /
+    `repro.serve.tenant`, PR 10) labels ``span.tenant.fit`` with the
+    cohort size of a batched fit and ``span.tenant.assign`` with the
+    number of DISTINCT tenants coalesced into one scoring launch;
+    ``tenant.fit.launches`` counts device dispatches (batched fit: 1;
+    the looped baseline: T) so launch amortization is readable next to
+    wall time.
+  * ``tenant=<id>`` — reserved for per-tenant series a deployment opts
+    into (e.g. billing-grade per-tenant record counters).  The built-in
+    paths deliberately emit only the coarse ``tenants=<T>`` label:
+    per-tenant label sets would make metric cardinality O(fleet size).
 
 This package is pure stdlib — no jax/numpy — so every layer may import
 it unconditionally without cycles or load cost.

@@ -4,10 +4,14 @@ from .scorer import (CenterSnapshot, Scorer, SnapshotPublisher,
                      snapshot_from_checkpoint)
 from .service import (DeadlineExceeded, Rejected, ScoreResult,
                       ScoringService, ServiceClosed, ServiceConfig)
+from .tenant import (TenantScorer, TenantScoringService, TenantSnapshot,
+                     tenant_snapshot)
 
 __all__ = ["assign_store", "assign_stream", "make_assigner",
            "make_serve_step", "make_prefill", "greedy_generate",
            "CenterSnapshot", "Scorer", "SnapshotPublisher",
            "snapshot_from_checkpoint",
            "DeadlineExceeded", "Rejected", "ScoreResult",
-           "ScoringService", "ServiceClosed", "ServiceConfig"]
+           "ScoringService", "ServiceClosed", "ServiceConfig",
+           "TenantScorer", "TenantScoringService", "TenantSnapshot",
+           "tenant_snapshot"]

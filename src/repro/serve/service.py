@@ -103,7 +103,16 @@ class ServiceConfig:
     overload response (``"queue"`` waits up to ``deadline_s``,
     ``"shed"`` rejects immediately); ``coalesce=False`` is the
     one-request-one-dispatch ablation (every request scored at its
-    natural shape — the benchmark baseline, not a production mode)."""
+    natural shape — the benchmark baseline, not a production mode).
+
+    ``max_group_rows`` is the fairness cap: requests may carry a group
+    id (the tenant plane tags each request with its tenant), and with
+    the cap set one group contributes at most that many rows per
+    dispatch — the coalescer takes eligible requests past an ineligible
+    run in FIFO order, so a firehose group cannot monopolize every
+    batch while a quiet group's lone request ages at position 300.
+    ``None`` (default) keeps exact strict-FIFO-run coalescing; the
+    queue head is always admitted (progress guarantee)."""
     max_batch_rows: int = 4096
     bucket_base: int = 64
     bucket_factor: int = 2
@@ -111,6 +120,7 @@ class ServiceConfig:
     policy: str = "queue"            # "queue" | "shed"
     deadline_s: float = 5.0
     coalesce: bool = True
+    max_group_rows: Optional[int] = None
 
     def __post_init__(self):
         if self.policy not in ("queue", "shed"):
@@ -121,6 +131,9 @@ class ServiceConfig:
                              "positive")
         if self.deadline_s <= 0:
             raise ValueError("deadline_s must be positive")
+        if self.max_group_rows is not None and self.max_group_rows <= 0:
+            raise ValueError("max_group_rows must be positive (or None "
+                             "to disable the fairness cap)")
 
 
 class _Request(NamedTuple):
@@ -128,6 +141,7 @@ class _Request(NamedTuple):
     n: int
     future: Future
     t_submit: float
+    group: Optional[str] = None   # fairness group (tenant id)
 
 
 class ScoringService:
@@ -170,13 +184,15 @@ class ScoringService:
 
     # -- client side -------------------------------------------------------
 
-    def submit(self, x) -> Future:
+    def submit(self, x, *, group: Optional[str] = None) -> Future:
         """Enqueue one assignment request; resolves to a `ScoreResult`.
 
         Shape/dim errors raise here (fail fast, nothing enqueued);
         overload raises `Rejected` (shed) or `DeadlineExceeded`
         (queue); scoring failures resolve the future with the
-        exception."""
+        exception.  ``group`` tags the request for the
+        ``max_group_rows`` fairness cap (the tenant service passes the
+        tenant id)."""
         x = np.asarray(x, np.float32)
         if x.ndim == 1:
             x = x[None, :]
@@ -186,7 +202,7 @@ class ScoringService:
             raise ValueError(f"request dim {x.shape[1]} != model dim "
                              f"{self._dim}")
         n = int(x.shape[0])
-        req = _Request(x, n, Future(), time.perf_counter())
+        req = _Request(x, n, Future(), time.perf_counter(), group)
         with self._cond:
             self._check_open()
             if not self._admissible(n):
@@ -294,22 +310,45 @@ class ScoringService:
         obs.gauge("serve.queue_rows").set(self._queued_rows)
 
     def _take(self):
-        """Pop a FIFO run of requests for one dispatch (coalescing up
-        to ``max_batch_rows``); None = worker should exit."""
+        """Pop requests for one dispatch (coalescing up to
+        ``max_batch_rows``); None = worker should exit.
+
+        Without a fairness cap this is the strict FIFO head run.  With
+        ``max_group_rows`` set, the scan continues past requests that
+        don't fit (batch full, or their group already at its cap),
+        taking later eligible requests in FIFO order — skipped requests
+        keep their queue position, and the head is always admitted, so
+        every request still drains in bounded dispatches."""
         with self._cond:
             while (not self._queue and self._failure is None
                    and not self._closed):
                 self._cond.wait()
             if self._failure is not None or not self._queue:
                 return None
+            cap = self.cfg.max_group_rows
             reqs = [self._queue.popleft()]
             rows = reqs[0].n
             if self.cfg.coalesce:
-                while (self._queue and rows + self._queue[0].n
-                       <= self.cfg.max_batch_rows):
-                    r = self._queue.popleft()
-                    reqs.append(r)
-                    rows += r.n
+                if cap is None:
+                    while (self._queue and rows + self._queue[0].n
+                           <= self.cfg.max_batch_rows):
+                        r = self._queue.popleft()
+                        reqs.append(r)
+                        rows += r.n
+                else:
+                    group_rows = {reqs[0].group: reqs[0].n}
+                    skipped = []
+                    while self._queue:
+                        r = self._queue.popleft()
+                        g_taken = group_rows.get(r.group, 0)
+                        if (rows + r.n <= self.cfg.max_batch_rows
+                                and g_taken + r.n <= cap):
+                            reqs.append(r)
+                            rows += r.n
+                            group_rows[r.group] = g_taken + r.n
+                        else:
+                            skipped.append(r)
+                    self._queue.extend(skipped)   # FIFO order preserved
             self._queued_rows -= rows
             self._gauges()
             self._cond.notify_all()      # room freed: wake submitters

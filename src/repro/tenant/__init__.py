@@ -1,0 +1,25 @@
+"""`repro.tenant` — the multi-tenant plane (PR 10).
+
+Thousands of small FCM models — per-user, per-cohort, per-region — as
+ONE stacked object (`TenantSet`) with one-launch operations end to end:
+
+  * `fit_tenants` — every tenant converges inside one compiled
+    while_loop (`engine.fcm_converge_batched`), ragged row counts and
+    tenant counts absorbed by the phantom-padding bucket ladder;
+  * `repro.serve.TenantScoringService` — cross-tenant traffic coalesces
+    into one gather-scored launch per batch bucket;
+  * `save_tenants` / `load_tenants` — one stacked checkpoint manifest,
+    template-free restore at any T, subset restore by id.
+
+`fit_tenants_looped` is the measured per-tenant baseline (same math,
+T dispatches) — `benchmarks/t16_tenant.py` quantifies the gap.
+"""
+from .core import (TenantSet, load_tenants, normalize_tenant_data,
+                   save_tenants, tenant_set)
+from .fit import (TenantFitConfig, fit_tenants, fit_tenants_looped,
+                  pack_tenants, seed_centers)
+
+__all__ = ["TenantSet", "load_tenants", "normalize_tenant_data",
+           "save_tenants", "tenant_set",
+           "TenantFitConfig", "fit_tenants", "fit_tenants_looped",
+           "pack_tenants", "seed_centers"]
